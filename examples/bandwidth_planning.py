@@ -1,0 +1,44 @@
+"""Cross-datacenter bandwidth planning with the paper's Table-6 simulator:
+how much bandwidth does a training run need at a target compute utilization,
+and what do DiLoCo's H and int8 outer compression buy?
+
+  PYTHONPATH=src python examples/bandwidth_planning.py --params 405e9 --step-time 26
+"""
+import argparse
+
+from repro.core import compute_util as cu
+from repro.core import wallclock as wc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--params", type=float, default=10e9)
+    ap.add_argument("--step-time", type=float, default=0.8)
+    args = ap.parse_args()
+
+    print(f"model: {args.params/1e9:.0f}B params, step time {args.step_time}s")
+    print(f"{'method':24s}" + "".join(f"  CU={c:.0%}" for c in cu.CU_TARGETS))
+    for h, label in [(1, "Data-Parallel"), (10, "DiLoCo H=10"),
+                     (100, "DiLoCo H=100"), (300, "DiLoCo H=300")]:
+        bw = [cu.required_bandwidth(args.params, args.step_time, c, sync_every=h) / 1e9
+              for c in cu.CU_TARGETS]
+        print(f"{label:24s}" + "".join(f"{b:8.1f}" for b in bw))
+        if h > 1:
+            bw8 = [b / 2 for b in bw]  # int8 outer-Δ vs bf16
+            print(f"{label + ' +int8Δ':24s}" + "".join(f"{b:8.1f}" for b in bw8))
+    print("(Gbit/s of cross-datacenter bandwidth; paper Table 6 structure)")
+
+    print("\nIdealized end-to-end wall-clock (paper Appendix A), 20N tokens:")
+    for net in (wc.LOW, wc.MEDIUM, wc.HIGH):
+        dp = wc.train_time(args.params, 20 * args.params, 2**21,
+                           algorithm="dp", cross_net=net)
+        dl = wc.train_time(args.params, 20 * args.params, 2**21,
+                           algorithm="diloco", m_replicas=4, sync_every=30,
+                           cross_net=net)
+        print(f"  {net.name:7s}: DP {dp['total_s']/3600:8.1f}h  "
+              f"DiLoCo M=4 {dl['total_s']/3600:8.1f}h  "
+              f"(speedup {dp['total_s']/dl['total_s']:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Finding 2 in miniature: DiLoCo M=1 (Lookahead variant) vs
+Data-Parallel at identical token budget, plus batch-size robustness.
+
+  PYTHONPATH=src python examples/diloco_vs_dp.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import DiLoCoConfig, OptimizerConfig, TrainConfig, get_config
+from repro.core.diloco import make_trainer
+from repro.data import SyntheticLM
+from repro.models import build_model
+
+cfg = get_config("tiny-t0")
+model = build_model(cfg)
+data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=128)
+TOKENS = 400_000
+
+
+def run(algo, m=1, batch_tokens=4096, h=15):
+    steps = TOKENS // batch_tokens
+    trainer = make_trainer(
+        model,
+        DiLoCoConfig(num_replicas=m, sync_every=h, data_parallel=(algo == "dp")),
+        OptimizerConfig(peak_lr=3e-3, warmup_steps=max(steps // 10, 1)),
+        TrainConfig(global_batch_tokens=batch_tokens, seq_len=128, steps=steps),
+    )
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    inner, outer = jax.jit(trainer.inner_step), jax.jit(trainer.outer_sync)
+    for t in range(steps):
+        state, _ = inner(state, data.global_batch(t, trainer.M, batch_tokens // 128 // trainer.M))
+        if algo == "diloco" and (t + 1) % h == 0:
+            state = outer(state)
+    if algo == "diloco":
+        state = outer(state)
+    evals = [float(trainer.eval_step(state, data.batch(10_000 + i, 0, 1, 16, eval=True)))
+             for i in range(6)]
+    return float(np.mean(evals))
+
+
+print(f"{'batch':>8s} {'Data-Parallel':>14s} {'DiLoCo M=1':>12s} {'DiLoCo M=2':>12s}")
+for b in (2048, 8192):
+    dp = run("dp", batch_tokens=b)
+    m1 = run("diloco", m=1, batch_tokens=b)
+    m2 = run("diloco", m=2, batch_tokens=b)
+    print(f"{b:8d} {dp:14.4f} {m1:12.4f} {m2:12.4f}")
+print("\n(paper Findings 2-3: M=1 matches/beats DP; DiLoCo degrades less "
+      "as batch grows)")

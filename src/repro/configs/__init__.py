@@ -1,0 +1,75 @@
+"""Architecture registry: ``get_config(arch)`` / ``get_smoke_config(arch)``.
+
+The 10 assigned architectures plus the paper's own Chinchilla family
+(``chinchilla-35m`` ... ``chinchilla-10b``) are selectable by name
+(``--arch <id>`` in the launchers).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    DiLoCoConfig,
+    MeshConfig,
+    ModelConfig,
+    OptimizerConfig,
+    SHAPE_GRID,
+    ShapeSpec,
+    TrainConfig,
+    shape_by_name,
+)
+
+_ASSIGNED = {
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "gemma-2b": "gemma_2b",
+    "qwen3-8b": "qwen3_8b",
+    "smollm-360m": "smollm_360m",
+    "deepseek-67b": "deepseek_67b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "mamba2-130m": "mamba2_130m",
+}
+
+ASSIGNED_ARCHS = tuple(_ASSIGNED)
+
+# archs with sub-quadratic sequence mixing -> run the long_500k cell
+SUBQUADRATIC = ("jamba-1.5-large-398b", "mamba2-130m")
+
+
+def _module(arch: str):
+    return importlib.import_module(f"repro.configs.{_ASSIGNED[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch in _ASSIGNED:
+        return _module(arch).CONFIG
+    if arch.startswith("chinchilla-"):
+        from repro.models.chinchilla import chinchilla_config
+
+        return chinchilla_config(arch.removeprefix("chinchilla-"))
+    if arch.startswith("tiny-"):
+        from repro.models.chinchilla import tiny_ladder
+
+        return tiny_ladder()[arch.removeprefix("tiny-")]
+    raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ASSIGNED)} + chinchilla-*")
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch in _ASSIGNED:
+        return _module(arch).SMOKE
+    return get_config(arch).replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, remat=False,
+    )
+
+
+def cells(arch: str):
+    """The dry-run shape cells for an arch, applying the assignment's skips."""
+    out = []
+    for s in SHAPE_GRID:
+        if s.name == "long_500k" and arch not in SUBQUADRATIC:
+            continue  # pure full-attention archs skip long-context decode
+        out.append(s)
+    return out

@@ -1,0 +1,258 @@
+"""Config dataclasses for the repro framework.
+
+Every architecture in the zoo is described by a single ``ModelConfig``;
+training/serving runs add a ``TrainConfig`` / ``ServeConfig``; the DiLoCo
+algorithm itself is configured by ``DiLoCoConfig`` (the paper's Table 2
+notation: M replicas, sync cadence H, inner lr gamma, outer lr eta).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description.  Defaults describe a dense llama-style LM."""
+
+    name: str = "unnamed"
+    family: str = "dense"  # dense | moe | hybrid | vlm | audio | ssm
+
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 2
+    n_kv_heads: int = 2
+    head_dim: int = 64
+    d_ff: int = 512
+    vocab_size: int = 512
+
+    # --- nonlinearity / norms -------------------------------------------
+    act: str = "silu"          # silu (SwiGLU when glu) | gelu (GeGLU when glu)
+    glu: bool = True
+    qk_norm: bool = False
+    norm_eps: float = 1e-6
+
+    # --- positional -----------------------------------------------------
+    rope_theta: float = 10_000.0
+
+    # --- MoE -------------------------------------------------------------
+    moe: bool = False
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0          # per-expert FFN width
+    moe_layer_freq: int = 1    # MoE every k-th layer (jamba: 2); 1 = every layer
+    first_dense: int = 0       # leading dense layers (deepseek-moe: 1)
+    dense_d_ff: int = 0        # FFN width of the dense layers of a MoE model
+    capacity_factor: float = 1.25
+    moe_group_size: int = 1024  # dispatch group size (tokens)
+    router_z_coef: float = 1e-3
+    aux_loss_coef: float = 1e-2
+
+    # --- hybrid / SSM -----------------------------------------------------
+    attn_layer_period: int = 0  # 0 = every layer is attention; k = 1 attn per k layers
+    ssm_state: int = 0          # mamba2 N (d_state); 0 = no ssm layers
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    ssm_n_groups: int = 1
+    unroll_ssm: bool = False     # dry-run: unroll the SSD chunk loop
+
+    # --- encoder-decoder ---------------------------------------------------
+    encoder_layers: int = 0     # >0 -> enc-dec model (decoder has cross-attn)
+
+    # --- modality frontend stub ---------------------------------------------
+    frontend: str = "none"      # none | vision_stub | audio_stub
+    n_frontend_tokens: int = 0  # patch/frame embeddings prepended to the sequence
+
+    # --- misc ----------------------------------------------------------------
+    tie_embeddings: bool = True
+    max_seq_len: int = 8192
+    z_loss: float = 1e-4
+    dtype: str = "float32"       # param/compute dtype ("bfloat16" on TPU)
+    remat: bool = True           # activation checkpointing across the layer scan
+    remat_policy: str = "nothing"  # nothing | save_comm (keep AR'd activations;
+    #                                recompute skips the 2 fwd TP all-reduces)
+    scan_layers: bool = True     # scan over (grouped) layers to keep HLO small
+    layer_group: int = 1         # layers fused into one scan body (hybrid: period)
+
+    # ------------------------------------------------------------------
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return max(1, self.d_inner // self.ssm_head_dim)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def replace(self, **kw: Any) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def layer_kind(self, i: int) -> str:
+        """Mixer kind of layer i: 'attn' or 'ssm'."""
+        if self.ssm_state == 0:
+            return "attn"
+        if self.attn_layer_period == 0:
+            return "ssm"
+        # jamba convention: one attention layer per period, at period offset
+        # `period // 2` (attn in the middle of each block of `period` layers).
+        return "attn" if i % self.attn_layer_period == self.attn_layer_period // 2 else "ssm"
+
+    def mlp_kind(self, i: int) -> str:
+        """FFN kind of layer i: 'dense' or 'moe'."""
+        if not self.moe:
+            return "dense"
+        if i < self.first_dense:
+            return "dense"
+        return "moe" if (i - self.first_dense) % self.moe_layer_freq == 0 else "dense"
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for D=20N budgets and rooflines)."""
+        d, v = self.d_model, self.vocab_size
+        total = v * d  # token embedding
+        if not self.tie_embeddings:
+            total += v * d
+        n_mats = 3 if self.glu else 2
+
+        def ffn_params(width: int) -> int:
+            return n_mats * d * width
+
+        def attn_params() -> int:
+            q = d * self.n_heads * self.head_dim
+            kv = 2 * d * self.n_kv_heads * self.head_dim
+            o = self.n_heads * self.head_dim * d
+            return q + kv + o
+
+        def ssm_params() -> int:
+            di, ns, g = self.d_inner, self.ssm_state, self.ssm_n_groups
+            h = self.ssm_heads
+            in_proj = d * (2 * di + 2 * g * ns + h)
+            conv = (di + 2 * g * ns) * self.ssm_conv
+            out = di * d
+            extras = 2 * h + di  # A_log, D, norm
+            return in_proj + conv + out + extras
+
+        def moe_params() -> int:
+            p = self.n_experts * n_mats * d * self.moe_d_ff
+            p += self.n_shared_experts * n_mats * d * self.moe_d_ff
+            p += d * self.n_experts  # router
+            return p
+
+        dec_layers = self.n_layers
+        for i in range(dec_layers):
+            total += attn_params() if self.layer_kind(i) == "attn" else ssm_params()
+            if self.mlp_kind(i) == "moe":
+                total += moe_params()
+            else:
+                total += ffn_params(self.dense_d_ff or self.d_ff)
+            total += 2 * d  # two norms
+        for _ in range(self.encoder_layers):
+            total += attn_params() + ffn_params(self.d_ff) + 2 * d
+        if self.encoder_layers:
+            total += dec_layers * (attn_params() + d)  # cross attention + its norm
+        total += d  # final norm
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top-k + shared experts count)."""
+        if not self.moe:
+            return self.param_count()
+        n_mats = 3 if self.glu else 2
+        d = self.d_model
+        inactive_per_moe_layer = (self.n_experts - self.top_k) * n_mats * d * self.moe_d_ff
+        n_moe_layers = sum(1 for i in range(self.n_layers) if self.mlp_kind(i) == "moe")
+        return self.param_count() - n_moe_layers * inactive_per_moe_layer
+
+
+@dataclass(frozen=True)
+class DiLoCoConfig:
+    """Paper Table 2: algorithm-specific knobs."""
+
+    num_replicas: int = 1            # M
+    sync_every: int = 30             # H
+    outer_lr: float = 0.7            # eta
+    outer_momentum: float = 0.9      # Nesterov momentum
+    nesterov: bool = True
+    data_parallel: bool = False      # True = pure Data-Parallel (no outer opt)
+    # --- beyond-paper features -----------------------------------------
+    compression: str = "none"        # none | int8  (outer-Δ all-reduce compression)
+    streaming_fragments: int = 0     # >0 -> Streaming DiLoCo with P fragments
+    error_feedback: bool = True      # residual accumulation for compressed sync
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 1e-3            # gamma (inner lr)
+    warmup_steps: int = 1000
+    final_lr_ratio: float = 0.05     # cosine decays to 5% of peak (paper §3)
+    b1: float = 0.9
+    b2: float = 0.99
+    eps: float = 1e-8
+    weight_decay: float = -1.0       # -1 -> 1/T rule (Wang & Aitchison, paper §3)
+    clip_norm: float = 1.0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    global_batch_tokens: int = 65536     # B, measured in tokens (paper convention)
+    seq_len: int = 2048
+    steps: int = 100
+    microbatches: int = 1                # gradient-accumulation factor
+    token_budget: int = 0                # 0 -> D = 20 * N * overtrain
+    overtrain: float = 1.0               # lambda (paper §5.2)
+    seed: int = 0
+    eval_every: int = 0
+    eval_batches: int = 4
+    checkpoint_every: int = 0
+    checkpoint_dir: str = ""
+    keep_checkpoints: int = 3
+    log_every: int = 10
+
+    @property
+    def batch_sequences(self) -> int:
+        return max(1, self.global_batch_tokens // self.seq_len)
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    """Mesh shape: replica (DiLoCo/pod) x data (DP/FSDP) x model (TP)."""
+
+    replica: int = 1
+    data: int = 1
+    model: int = 1
+    axis_names: tuple = ("replica", "data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        return self.replica * self.data * self.model
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One dry-run cell: an input-shape regime for a given architecture."""
+
+    name: str            # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int    # sequences
+    kind: str            # train | prefill | decode
+
+
+SHAPE_GRID = (
+    ShapeSpec("train_4k", 4_096, 256, "train"),
+    ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    ShapeSpec("long_500k", 524_288, 1, "decode"),
+)
+
+
+def shape_by_name(name: str) -> ShapeSpec:
+    for s in SHAPE_GRID:
+        if s.name == name:
+            return s
+    raise KeyError(name)

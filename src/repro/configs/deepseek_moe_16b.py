@@ -1,0 +1,33 @@
+"""deepseek-moe-16b [arXiv:2401.06066]: fine-grained MoE, 2 shared + 64
+routed top-6 experts, first layer dense."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,          # MHA per assignment (GQA kv=16)
+    head_dim=128,
+    d_ff=1408,              # per-expert width (assignment's d_ff column)
+    vocab_size=102_400,
+    act="silu",
+    glu=True,
+    moe=True,
+    n_experts=64,
+    n_shared_experts=2,
+    top_k=6,
+    moe_d_ff=1408,
+    moe_layer_freq=1,
+    first_dense=1,          # deepseek-moe: leading dense layer
+    dense_d_ff=10_944,      # dense-layer FFN width (paper's 0.5*4*d ratio x glu)
+    tie_embeddings=False,
+    max_seq_len=32_768,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=3, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+    d_ff=64, moe_d_ff=64, dense_d_ff=128, n_experts=4, top_k=2,
+    n_shared_experts=1, vocab_size=256, moe_group_size=64, remat=False,
+)

@@ -1,0 +1,23 @@
+"""gemma-2b [arXiv:2403.08295]: GeGLU, head_dim 256, MQA (kv=1), vocab 256k."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b",
+    family="dense",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,            # MQA
+    head_dim=256,
+    d_ff=16_384,
+    vocab_size=256_000,
+    act="gelu",
+    glu=True,                # GeGLU
+    tie_embeddings=True,
+    max_seq_len=32_768,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=1, head_dim=32,
+    d_ff=128, vocab_size=512, remat=False,
+)

@@ -1,0 +1,30 @@
+"""granite-moe-3b-a800m [hf:ibm-granite]: 40 experts top-8, small experts."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=512,               # per-expert width
+    vocab_size=49_155,
+    act="silu",
+    glu=True,
+    moe=True,
+    n_experts=40,
+    n_shared_experts=0,
+    top_k=8,
+    moe_d_ff=512,
+    moe_layer_freq=1,
+    tie_embeddings=True,
+    max_seq_len=32_768,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=32, moe_d_ff=32, n_experts=4, top_k=2, vocab_size=256,
+    moe_group_size=64, remat=False,
+)

@@ -1,0 +1,40 @@
+"""jamba-1.5-large-398b [arXiv:2403.19887]: Mamba+attention 1:7 interleave,
+MoE 16e top-2 every other layer.  Our SSM blocks are Mamba-2 SSD (TPU
+adaptation; see DESIGN.md §4)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24_576,
+    vocab_size=65_536,
+    act="silu",
+    glu=True,
+    moe=True,
+    n_experts=16,
+    top_k=2,
+    moe_d_ff=24_576,
+    moe_layer_freq=2,        # MoE every other layer
+    dense_d_ff=24_576,
+    attn_layer_period=8,     # 1 attention layer per 8 (1:7 attn:mamba)
+    ssm_state=128,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    tie_embeddings=False,
+    max_seq_len=524_288,
+    layer_group=8,           # scan over 9 groups of 8 layers
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, moe_d_ff=128, dense_d_ff=128, n_experts=4, top_k=2,
+    vocab_size=256, attn_layer_period=2, layer_group=2,
+    ssm_state=16, ssm_head_dim=16, ssm_chunk=16, moe_group_size=64, remat=False,
+)

@@ -1,0 +1,27 @@
+"""llava-next-mistral-7b [hf:llava-hf/llava-v1.6-mistral-7b-hf]: Mistral-7B
+backbone; anyres vision tiling is a STUB per the assignment — input_specs()
+provides precomputed patch embeddings (base 576 + 4 tiles x 576 = 2880)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14_336,
+    vocab_size=32_000,
+    act="silu",
+    glu=True,
+    frontend="vision_stub",
+    n_frontend_tokens=2880,   # anyres: 576 base + 2x2 grid of 576
+    tie_embeddings=False,
+    max_seq_len=32_768,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, n_frontend_tokens=16, remat=False,
+)

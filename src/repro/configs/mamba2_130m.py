@@ -1,0 +1,28 @@
+"""mamba2-130m [arXiv:2405.21060]: attention-free SSD (state-space duality).
+No FFN layers (d_ff=0): the block is mixer-only, per the Mamba architecture."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    n_heads=0,
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=0,                   # attn-free, FFN-free: pure mamba blocks
+    vocab_size=50_280,
+    attn_layer_period=0,      # every layer is SSM
+    ssm_state=128,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=128,
+    tie_embeddings=True,
+    max_seq_len=1_048_576,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, d_model=64, ssm_state=16, ssm_head_dim=16, ssm_chunk=16,
+    vocab_size=256, remat=False,
+)

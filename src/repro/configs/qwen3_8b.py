@@ -1,0 +1,24 @@
+"""qwen3-8b [hf:Qwen/Qwen3-8B]: dense, QK-norm, GQA kv=8."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b",
+    family="dense",
+    n_layers=36,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=12_288,
+    vocab_size=151_936,
+    act="silu",
+    glu=True,
+    qk_norm=True,
+    tie_embeddings=False,
+    max_seq_len=32_768,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, remat=False,
+)

@@ -1,0 +1,28 @@
+"""seamless-m4t-medium [arXiv:2308.11596]: encoder-decoder multimodal; the
+audio frontend is a STUB — input_specs() provides precomputed frame
+embeddings (b, n_frames, d_model)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    n_layers=12,              # decoder layers
+    encoder_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,            # MHA (assignment: GQA kv=16)
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256_206,
+    act="gelu",
+    glu=False,
+    frontend="audio_stub",
+    n_frontend_tokens=1024,   # precomputed audio frame embeddings
+    tie_embeddings=True,
+    max_seq_len=32_768,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, encoder_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    head_dim=16, d_ff=128, vocab_size=256, n_frontend_tokens=16, remat=False,
+)

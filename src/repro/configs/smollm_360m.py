@@ -1,0 +1,23 @@
+"""smollm-360m [hf:HuggingFaceTB/SmolLM]: llama-arch small model."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m",
+    family="dense",
+    n_layers=32,
+    d_model=960,
+    n_heads=15,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=2560,
+    vocab_size=49_152,
+    act="silu",
+    glu=True,
+    tie_embeddings=True,
+    max_seq_len=32_768,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, d_model=60, n_heads=3, n_kv_heads=1, head_dim=20,
+    d_ff=128, vocab_size=256, remat=False,
+)

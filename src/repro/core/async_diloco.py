@@ -1,0 +1,114 @@
+"""Asynchronous DiLoCo (Liu et al. 2024b, the paper's §8 future work).
+
+Replicas run their H inner steps WITHOUT a barrier; each applies its outer
+gradient to the global model on arrival, discounted by staleness (how many
+global versions landed since the replica last pulled):
+
+    w(s) = discount^s,     θ ← OuterOpt(θ, w(s)·Δ_m)
+
+With simultaneous arrivals and discount=1 this reduces exactly to classic
+DiLoCo (tested).  The trainer below simulates heterogeneous replica speeds
+in-process; on a real deployment each pod runs its own inner loop and the
+global model lives behind the outer-update RPC.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import outer_opt
+from repro.core.diloco import DiLoCo
+
+
+@dataclasses.dataclass
+class AsyncDiLoCo:
+    trainer: DiLoCo
+    staleness_discount: float = 0.5
+
+    def init_state(self, key: jax.Array, dtype=jnp.float32) -> dict:
+        st = self.trainer.init_state(key, dtype)
+        st["global_version"] = jnp.zeros((), jnp.int32)
+        # version of the global model each replica last pulled
+        st["pulled_version"] = jnp.zeros((self.trainer.M,), jnp.int32)
+        return st
+
+    # -- per-replica inner work (no barrier) ------------------------------
+    def replica_inner_step(self, state: dict, replica: int, batch_m: dict) -> dict:
+        """One inner step for ONE replica (others untouched)."""
+        params_m = jax.tree.map(lambda p: p[replica], state["inner_params"])
+        opt_m = jax.tree.map(lambda o: o[replica], state["inner_opt"])
+        new_p, new_o, _ = self.trainer._replica_step(params_m, opt_m, batch_m, state["step"])
+        return {
+            **state,
+            "inner_params": jax.tree.map(
+                lambda full, new: full.at[replica].set(new.astype(full.dtype)),
+                state["inner_params"], new_p,
+            ),
+            "inner_opt": jax.tree.map(
+                lambda full, new: full.at[replica].set(new), state["inner_opt"], new_o
+            ),
+            "step": state["step"] + 1,
+        }
+
+    # -- arrival: apply one replica's outer gradient ----------------------
+    def arrive(self, state: dict, replica: int) -> dict:
+        """Replica `replica` reports: apply its staleness-discounted Δ and
+        re-broadcast the fresh global model to it."""
+        dcfg = self.trainer.dcfg
+        gparams = state["global_params"]
+        staleness = state["global_version"] - state["pulled_version"][replica]
+        w = jnp.asarray(self.staleness_discount, jnp.float32) ** staleness.astype(jnp.float32)
+
+        delta = jax.tree.map(
+            lambda g, p: w * (g.astype(jnp.float32) - p[replica].astype(jnp.float32)),
+            gparams, state["inner_params"],
+        )
+        new_global, new_mom = outer_opt.outer_step(
+            gparams, delta, state["outer_m"],
+            lr=dcfg.outer_lr, mu=dcfg.outer_momentum, nesterov=dcfg.nesterov,
+        )
+        new_inner = jax.tree.map(
+            lambda full, g: full.at[replica].set(g.astype(full.dtype)),
+            state["inner_params"], new_global,
+        )
+        version = state["global_version"] + 1
+        return {
+            **state,
+            "global_params": new_global,
+            "outer_m": new_mom,
+            "inner_params": new_inner,
+            "global_version": version,
+            "pulled_version": state["pulled_version"].at[replica].set(version),
+        }
+
+
+def simulate(async_trainer: AsyncDiLoCo, data, *, steps: int, h: int,
+             speeds: Optional[list] = None, seed: int = 0):
+    """In-process simulation: replica m runs `speeds[m]` inner steps per tick;
+    it reports (arrives) every time it accumulates h inner steps.
+    Returns (state, losses)."""
+    tr = async_trainer.trainer
+    m_total = tr.M
+    speeds = speeds or [1] * m_total
+    state = async_trainer.init_state(jax.random.PRNGKey(seed))
+    inner = jax.jit(async_trainer.replica_inner_step, static_argnums=1)
+    arrive = jax.jit(async_trainer.arrive, static_argnums=1)
+    since_sync = [0] * m_total
+    losses = []
+    t = 0
+    for tick in range(steps):
+        for m in range(m_total):
+            for _ in range(speeds[m]):
+                batch = data.batch(t, m, m_total, 2)
+                state = inner(state, m, batch)
+                t += 1
+                since_sync[m] += 1
+                if since_sync[m] >= h:
+                    state = arrive(state, m)
+                    since_sync[m] = 0
+        loss = tr.eval_step(state, data.batch(90_000 + tick, 0, 1, 8, eval=True))
+        losses.append(float(loss))
+    return state, losses

@@ -1,0 +1,62 @@
+"""Outer-gradient (Δ) compression for the cross-pod all-reduce.
+
+Beyond-paper optimization: DiLoCo's outer gradients are parameter-space
+deltas accumulated over H inner steps — empirically low dynamic range, so
+int8 symmetric quantization with error feedback costs ~nothing in quality
+while cutting cross-datacenter bytes another 2x vs bf16 (8x vs fp32).
+The Pallas kernel version (per-128-block scales) is in
+``repro.kernels.delta_quant``; this module is the jnp reference used on CPU
+and by the trainer by default.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8. Returns (q int8, scale f32 scalar)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(delta, ef=None):
+    """Quantize+dequantize every leaf, tracking error feedback.
+
+    Returns (transmitted_delta, new_error_feedback).  The transmitted value
+    is what the all-reduce actually carries (int8 payload semantics); the
+    residual is re-injected next round so the bias does not accumulate.
+    """
+
+    def one(d, e):
+        v = d.astype(jnp.float32) + (e if e is not None else 0.0)
+        q, s = int8_quantize(v)
+        deq = int8_dequantize(q, s)
+        return deq.astype(d.dtype), (v - deq)
+
+    flat_d, treedef = jax.tree.flatten(delta)
+    flat_e = jax.tree.leaves(ef) if ef is not None else [None] * len(flat_d)
+    pairs = [one(d, e) for d, e in zip(flat_d, flat_e)]
+    sent = jax.tree.unflatten(treedef, [p for p, _ in pairs])
+    new_ef = jax.tree.unflatten(treedef, [e for _, e in pairs])
+    return sent, new_ef
+
+
+def init_error_feedback(params, num_replicas: int):
+    return jax.tree.map(
+        lambda p: jnp.zeros((num_replicas, *p.shape), jnp.float32), params
+    )
+
+
+def abstract_error_feedback(params, num_replicas: int):
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct((num_replicas, *p.shape), jnp.float32), params
+    )

@@ -1,0 +1,79 @@
+"""Compute-utilization simulator (paper §5.1, Table 6 / Figure 10).
+
+CU = compute_time / (compute_time + comm_time).  For a model of N params
+synchronized every H steps over a network of bandwidth W:
+
+    comm_per_step = 2·N·bits/W · (1 − 1/R) / H        (amortized outer sync)
+    CU(W) = step_time / (step_time + comm_per_step)
+
+``required_bandwidth`` inverts this: the minimum W reaching a CU target.
+
+Calibration note: the paper's published Table-6 values are consistent with a
+FULL-DUPLEX ring (send/receive overlap, so wall time ≈ N·bits·(1−1/R)/W
+without the half-duplex factor 2 of Appendix A) at ~8 bits/param — e.g.
+Llama3-405B @ CU=50%: ours 122.6 Gbit/s vs paper 126.5 (their simulator
+snaps to a geometric grid).  ``repro.core.wallclock`` keeps the Appendix-A
+half-duplex formula verbatim; this module matches Table 6.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# paper Table 6 rows: (name, params, step_time_s)
+TABLE6_MODELS = (
+    ("Chinchilla-10B", 10e9, 0.8),
+    ("Llama3-405B", 405e9, 26.0),
+    ("DeepSeek-V3-671B", 671e9, 20.0),
+)
+
+CU_TARGETS = (0.50, 0.80, 0.90, 0.95, 0.99)
+H_VALUES = (1, 10, 50, 100, 300)
+
+
+def comm_time_per_step(n_params, bandwidth_bps, sync_every=1, r_nodes=64, bits_per_param=8):
+    wire_bits = n_params * bits_per_param * (1.0 - 1.0 / r_nodes)  # full-duplex ring
+    return wire_bits / bandwidth_bps / sync_every
+
+
+def compute_utilization(n_params, step_time, bandwidth_bps, sync_every=1, **kw):
+    comm = comm_time_per_step(n_params, bandwidth_bps, sync_every, **kw)
+    return step_time / (step_time + comm)
+
+
+def required_bandwidth(n_params, step_time, cu_target, sync_every=1,
+                       r_nodes=64, bits_per_param=8):
+    """Minimum bandwidth (bits/s) to reach `cu_target`."""
+    comm_budget = step_time * (1.0 - cu_target) / cu_target
+    wire_bits = n_params * bits_per_param * (1.0 - 1.0 / r_nodes)  # full-duplex ring
+    return wire_bits / (comm_budget * sync_every)
+
+
+def bandwidth_grid(lo=0.1e9, hi=1000e9, steps=50):
+    return np.geomspace(lo, hi, steps)
+
+
+def snap_to_grid(w, grid=None):
+    g = bandwidth_grid() if grid is None else grid
+    idx = np.searchsorted(g, w)
+    return g[min(idx, len(g) - 1)]
+
+
+def table6(bits_per_param=8, compression_ratio=1.0) -> list:
+    """Reproduce the paper's Table 6 structure.
+
+    ``compression_ratio``: beyond-paper int8 outer-Δ compression divides the
+    outer payload (e.g. 2.0 for int8-vs-bf16).
+    """
+    rows = []
+    for name, n, step in TABLE6_MODELS:
+        for algo, h in [("Data-Parallel", 1)] + [("DiLoCo", h) for h in H_VALUES]:
+            bw = [
+                required_bandwidth(n / compression_ratio if (algo == "DiLoCo" and h > 1) else n,
+                                   step, cu, sync_every=h,
+                                   bits_per_param=bits_per_param) / 1e9
+                for cu in CU_TARGETS
+            ]
+            rows.append({"model": name, "size": n, "step_time": step,
+                         "method": f"{algo}, H={h}" if algo == "DiLoCo" else algo,
+                         "gbits": bw})
+    return rows

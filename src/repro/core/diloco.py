@@ -1,0 +1,290 @@
+"""DiLoCo trainer — the paper's Algorithm 1 as a first-class JAX module.
+
+The M model replicas live on a leading "replica" axis of every inner-state
+leaf, sharded over the mesh's replica/pod axis (DrJAX-style: ``jax.vmap``
+over the axis + sharding constraints give GSPMD explicit replica
+parallelism).  Inner steps are AdamW on each replica's own data shard; every
+H steps the outer gradients ``Δ_m = θ_global - θ_m`` are averaged — the ONLY
+cross-pod collective — and SGD+Nesterov updates the global model, which is
+re-broadcast.
+
+Data-Parallel is the ``data_parallel=True`` special case (no outer step);
+DiLoCo with M=1 is the paper's Lookahead-style variant (outer step kept).
+
+Two execution paths share the same functions:
+  * ``inner_step`` / ``outer_sync``: separate executables for the real
+    training loop (H handled in Python — no per-step cond overhead);
+  * ``train_step``: fused single executable with ``lax.cond`` on
+    ``step % H == 0`` — used by the multi-pod dry-run so the whole
+    communication schedule (including the cross-pod all-reduce) is visible
+    in one compiled HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import DiLoCoConfig, OptimizerConfig, TrainConfig
+from repro.core import compression, outer_opt
+from repro.models.build import Model
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.adamw import abstract_adamw_state
+from repro.optim.schedules import warmup_cosine
+
+
+@dataclasses.dataclass
+class DiLoCo:
+    model: Model
+    dcfg: DiLoCoConfig
+    ocfg: OptimizerConfig
+    tcfg: TrainConfig
+
+    # ------------------------------------------------------------------
+    @property
+    def weight_decay(self) -> float:
+        # paper §3 (Wang & Aitchison): lambda = 1/T
+        if self.ocfg.weight_decay >= 0:
+            return self.ocfg.weight_decay
+        return 1.0 / max(self.tcfg.steps, 1)
+
+    @property
+    def M(self) -> int:
+        return self.dcfg.num_replicas
+
+    # ---- state ------------------------------------------------------------
+    def init_state(self, key: jax.Array, dtype=jnp.float32) -> dict:
+        gparams = self.model.init(key, dtype)
+        inner = jax.tree.map(lambda x: jnp.repeat(x[None], self.M, 0), gparams)
+        opt1 = adamw_init(gparams)
+        inner_opt = jax.tree.map(lambda x: jnp.repeat(x[None], self.M, 0), opt1)
+        state = {
+            "step": jnp.zeros((), jnp.int32),
+            "inner_params": inner,
+            "inner_opt": inner_opt,
+        }
+        if not self.dcfg.data_parallel:
+            state["global_params"] = gparams
+            state["outer_m"] = outer_opt.outer_init(gparams)
+            if self.dcfg.compression != "none" and self.dcfg.error_feedback:
+                state["ef"] = compression.init_error_feedback(gparams, self.M)
+        return state
+
+    def abstract_state(self, dtype=jnp.bfloat16) -> dict:
+        gparams = self.model.abstract_params(dtype)
+
+        def lead(t):
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((self.M, *s.shape), s.dtype), t
+            )
+
+        state = {
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+            "inner_params": lead(gparams),
+            "inner_opt": lead(abstract_adamw_state(gparams)),
+        }
+        if not self.dcfg.data_parallel:
+            state["global_params"] = gparams
+            state["outer_m"] = outer_opt.abstract_outer_state(gparams)
+            if self.dcfg.compression != "none" and self.dcfg.error_feedback:
+                state["ef"] = compression.abstract_error_feedback(gparams, self.M)
+        return state
+
+    def state_partition_specs(self) -> dict:
+        """PartitionSpecs for the state under the current sharding rules.
+
+        ZeRO-1 support: if the rules define "opt_embed", the AdamW moments
+        shard their weight-embed dim over that axis while the *params* keep
+        the plain "embed" rule (e.g. params replicated over data for
+        gather-free compute, fp32 moments sharded over data — GSPMD inserts
+        the grad reduce-scatter + param all-gather around the update).
+        """
+        pspec = self.model.param_partition_specs
+        rules = sharding.current_rules()
+
+        def opt_spec(extra):
+            if "opt_embed" in rules:
+                overlay = dict(rules)
+                overlay["embed"] = overlay["opt_embed"]
+                with sharding.use_rules(overlay):
+                    return self.model.param_partition_specs(extra_leading=extra)
+            return pspec(extra_leading=extra)
+
+        rep = ("replica",)
+        specs = {
+            "step": sharding.spec(),
+            "inner_params": pspec(extra_leading=rep),
+            "inner_opt": {
+                "m": opt_spec(rep),
+                "v": opt_spec(rep),
+                "count": sharding.spec("replica"),
+            },
+        }
+        if not self.dcfg.data_parallel:
+            specs["global_params"] = pspec()
+            specs["outer_m"] = pspec()
+            if self.dcfg.compression != "none" and self.dcfg.error_feedback:
+                specs["ef"] = pspec(extra_leading=rep)
+        return specs
+
+    def batch_partition_specs(self, batch) -> dict:
+        """Batch leaves carry a leading replica axis then (batch, seq, ...)."""
+
+        def one(leaf):
+            names = ["replica", "batch", "seq"] + [None] * max(0, leaf.ndim - 3)
+            return sharding.spec(*names[: leaf.ndim])
+
+        return jax.tree.map(one, batch)
+
+    # ---- inner step ----------------------------------------------------------
+    def _replica_step(self, params, opt, batch, step):
+        k = self.tcfg.microbatches
+        if k > 1:
+            # gradient accumulation: scan over k microbatches (sequential in
+            # time on the real machine; grads averaged before the update)
+            split = jax.tree.map(
+                lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]), batch
+            )
+
+            def body(carry, mb):
+                g_acc, l_acc, m_acc = carry
+                (l, m), g = jax.value_and_grad(
+                    lambda p: self.model.loss_fn(p, mb), has_aux=True
+                )(params)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / k, g_acc, g
+                )
+                m_acc = jax.tree.map(lambda a, b: a + b / k, m_acc, m)
+                return (g_acc, l_acc + l / k, m_acc), None
+
+            zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            _, m0 = jax.eval_shape(
+                lambda p: self.model.loss_fn(p, jax.tree.map(lambda x: x[0], split)), params
+            )
+            zeros_m = jax.tree.map(lambda s: jnp.zeros((), jnp.float32), m0)
+            (grads, loss_val, metrics), _ = jax.lax.scan(
+                body, (zeros_g, jnp.zeros(()), zeros_m), split
+            )
+        else:
+            def loss(p):
+                return self.model.loss_fn(p, batch)
+
+            (loss_val, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, self.ocfg.clip_norm)
+        lr = warmup_cosine(
+            step + 1,  # 1-based: step 0 would otherwise burn a batch at lr=0
+            peak_lr=self.ocfg.peak_lr,
+            warmup=self.ocfg.warmup_steps,
+            total=self.tcfg.steps,
+            final_ratio=self.ocfg.final_lr_ratio,
+        )
+        params, opt = adamw_update(
+            params, grads, opt,
+            lr=lr, b1=self.ocfg.b1, b2=self.ocfg.b2, eps=self.ocfg.eps,
+            weight_decay=self.weight_decay,
+        )
+        metrics = dict(metrics)
+        metrics["loss"] = loss_val
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return params, opt, metrics
+
+    def inner_step(self, state: dict, batch: dict) -> Tuple[dict, dict]:
+        """One inner AdamW step on every replica (vmapped over the M axis)."""
+        step = state["step"]
+        params, opt, metrics = jax.vmap(
+            self._replica_step, in_axes=(0, 0, 0, None)
+        )(state["inner_params"], state["inner_opt"], batch, step)
+        params = self._constrain(params)
+        state = {**state, "inner_params": params, "inner_opt": opt, "step": step + 1}
+        metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), metrics)
+        return state, metrics
+
+    def _constrain(self, inner_params):
+        rules = sharding.current_rules()
+        if not rules:
+            return inner_params
+        specs = self.model.param_partition_specs(extra_leading=("replica",))
+        return sharding.tree_constrain(inner_params, specs)
+
+    # ---- outer step -------------------------------------------------------------
+    def outer_sync(self, state: dict, weights: Optional[jax.Array] = None) -> dict:
+        """Outer gradient all-reduce + Nesterov step + broadcast.
+
+        ``weights``: optional (M,) participation weights (straggler dropout /
+        partial participation).  Default: uniform 1/M.
+        """
+        if self.dcfg.data_parallel:
+            return state
+        gparams = state["global_params"]
+        inner = state["inner_params"]
+
+        # Δ_m = θ_global - θ_m   (leading M axis)
+        delta_m = jax.tree.map(
+            lambda g, p: g[None].astype(jnp.float32) - p.astype(jnp.float32), gparams, inner
+        )
+
+        new_ef = None
+        if self.dcfg.compression == "int8":
+            ef = state.get("ef")
+            delta_m, new_ef = compression.compress_tree(delta_m, ef)
+
+        if weights is None:
+            delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), delta_m)
+        else:
+            w = weights / jnp.maximum(weights.sum(), 1e-9)
+            delta = jax.tree.map(
+                lambda d: jnp.tensordot(w, d.astype(jnp.float32), axes=1), delta_m
+            )
+
+        new_global, new_mom = outer_opt.outer_step(
+            gparams, delta, state["outer_m"],
+            lr=self.dcfg.outer_lr, mu=self.dcfg.outer_momentum,
+            nesterov=self.dcfg.nesterov,
+        )
+        # broadcast the fresh global model to all replicas
+        new_inner = jax.tree.map(
+            lambda g, p: jnp.broadcast_to(g[None].astype(p.dtype), p.shape), new_global, inner
+        )
+        new_inner = self._constrain(new_inner)
+        out = {
+            **state,
+            "inner_params": new_inner,
+            "global_params": new_global,
+            "outer_m": new_mom,
+        }
+        if new_ef is not None:
+            out["ef"] = new_ef
+        return out
+
+    # ---- fused step (dry-run / single-executable loops) ----------------------------
+    def train_step(self, state: dict, batch: dict) -> Tuple[dict, dict]:
+        state, metrics = self.inner_step(state, batch)
+        if self.dcfg.data_parallel:
+            return state, metrics
+        sync_now = (state["step"] % self.dcfg.sync_every) == 0
+        state = jax.lax.cond(sync_now, self.outer_sync, lambda s: s, state)
+        return state, metrics
+
+    # ---- evaluation -------------------------------------------------------------------
+    def eval_params(self, state: dict):
+        """Paper §2.2: evaluate the most recent *global* model (DP: the model)."""
+        if self.dcfg.data_parallel:
+            return jax.tree.map(lambda p: p[0], state["inner_params"])
+        return state["global_params"]
+
+    def eval_step(self, state: dict, batch: dict) -> jax.Array:
+        """batch WITHOUT replica axis; returns scalar eval nll."""
+        params = self.eval_params(state)
+        _, metrics = self.model.loss_fn(params, batch)
+        return metrics["nll"]
+
+
+def make_trainer(model: Model, dcfg: DiLoCoConfig, ocfg: OptimizerConfig, tcfg: TrainConfig) -> DiLoCo:
+    if dcfg.data_parallel:
+        assert dcfg.num_replicas == 1, "Data-Parallel is the M=1, no-outer-opt case"
+    return DiLoCo(model, dcfg, ocfg, tcfg)

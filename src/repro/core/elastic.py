@@ -1,0 +1,50 @@
+"""Elastic scaling + straggler mitigation for DiLoCo.
+
+DiLoCo's outer boundary is a natural fault-isolation point:
+
+* **Straggler / failure dropout** — ``participation_weights(mask)`` feeds
+  ``DiLoCo.outer_sync(state, weights=...)``: replicas that miss the sync
+  deadline are excluded from the Δ-average (weighted partial participation,
+  FedOpt semantics).  A dead replica only loses its inner progress since the
+  last sync.
+* **Elastic resize** — ``resize_replicas``: M can change *between rounds*.
+  Surviving replicas keep their inner optimizer state; new replicas
+  bootstrap from the global model with fresh inner state.  Outer momentum is
+  global-shaped, so it carries over exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def participation_weights(mask) -> jax.Array:
+    """(M,) bool -> normalized weights; all-False falls back to uniform."""
+    m = jnp.asarray(mask, jnp.float32)
+    total = m.sum()
+    return jnp.where(total > 0, m, jnp.ones_like(m))
+
+
+def resize_replicas(trainer, state: dict, new_m: int) -> dict:
+    """Return a state with ``new_m`` replicas (DiLoCo only, between rounds)."""
+    assert not trainer.dcfg.data_parallel
+    old_m = trainer.M
+    gparams = state["global_params"]
+
+    def grow(leaf, fresh):
+        if new_m <= old_m:
+            return leaf[:new_m]
+        extra = jnp.repeat(fresh[None], new_m - old_m, 0).astype(leaf.dtype)
+        return jnp.concatenate([leaf, extra], axis=0)
+
+    new_inner = jax.tree.map(grow, state["inner_params"], gparams)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), gparams)
+    new_opt = {
+        "m": jax.tree.map(grow, state["inner_opt"]["m"], zeros),
+        "v": jax.tree.map(grow, state["inner_opt"]["v"], zeros),
+        "count": grow(state["inner_opt"]["count"], state["inner_opt"]["count"][0]),
+    }
+    out = {**state, "inner_params": new_inner, "inner_opt": new_opt}
+    if "ef" in state:
+        out["ef"] = jax.tree.map(grow, state["ef"], zeros)
+    return out

@@ -1,0 +1,37 @@
+"""Outer optimizer: SGD with Nesterov momentum on *outer gradients*.
+
+Paper Algorithm 1: every H steps each replica's parameter delta
+``Δ_m = θ^(t-H) - θ_m^(t)`` is averaged (an all-reduce over the replica/pod
+axis) and treated as a gradient estimate for the global model.  The paper
+uses SGD + Nesterov momentum 0.9 with a constant outer learning rate η.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def outer_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def abstract_outer_state(params):
+    return jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+
+
+def outer_step(global_params, delta, momentum, *, lr: float, mu: float = 0.9, nesterov: bool = True):
+    """Returns (new_global_params, new_momentum).  delta = θ_prev - avg(θ_m)."""
+
+    def upd(g, d, m):
+        d32 = d.astype(jnp.float32)
+        m_new = mu * m + d32
+        step = d32 + mu * m_new if nesterov else m_new
+        return (g.astype(jnp.float32) - lr * step).astype(g.dtype), m_new
+
+    flat_g, treedef = jax.tree.flatten(global_params)
+    flat_d = jax.tree.leaves(delta)
+    flat_m = jax.tree.leaves(momentum)
+    pairs = [upd(g, d, m) for g, d, m in zip(flat_g, flat_d, flat_m)]
+    new_params = jax.tree.unflatten(treedef, [p for p, _ in pairs])
+    new_mom = jax.tree.unflatten(treedef, [m for _, m in pairs])
+    return new_params, new_mom

@@ -1,0 +1,77 @@
+"""Streaming DiLoCo (Douillard et al. 2025): fragment-wise outer sync.
+
+Parameters are partitioned into P fragments; fragment p syncs every H steps
+at offset p*(H/P), so *some* fragment syncs every H/P steps.  Total bytes
+are unchanged (paper Appendix A notes this) but peak per-step communication
+drops by P and the sync can overlap inner compute.  Fragments keep their own
+slice of the outer momentum; the global model is updated fragment-wise.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import outer_opt
+
+
+def fragment_assignment(params, num_fragments: int) -> List[int]:
+    """Leaf index -> fragment id (round-robin over flattened leaves)."""
+    n = len(jax.tree.leaves(params))
+    return [i % num_fragments for i in range(n)]
+
+
+def fragments_due(step: int, num_fragments: int, sync_every: int) -> List[int]:
+    """Which fragments sync at `step` (1-based step count, like step%H==0)."""
+    if num_fragments <= 0:
+        return []
+    stride = max(sync_every // num_fragments, 1)
+    due = []
+    for p in range(num_fragments):
+        if (step - p * stride) % sync_every == 0:
+            due.append(p)
+    return due
+
+
+def outer_sync_fragment(trainer, state: dict, fragment: int) -> dict:
+    """Outer sync restricted to one fragment's leaves."""
+    dcfg = trainer.dcfg
+    assert not dcfg.data_parallel
+    assign = fragment_assignment(state["global_params"], dcfg.streaming_fragments)
+
+    gleaves, treedef = jax.tree.flatten(state["global_params"])
+    ileaves = jax.tree.leaves(state["inner_params"])
+    mleaves = jax.tree.leaves(state["outer_m"])
+
+    new_g, new_i, new_m = [], [], []
+    for idx, (g, p, m) in enumerate(zip(gleaves, ileaves, mleaves)):
+        if assign[idx] != fragment:
+            new_g.append(g)
+            new_i.append(p)
+            new_m.append(m)
+            continue
+        delta = jnp.mean(g[None].astype(jnp.float32) - p.astype(jnp.float32), axis=0)
+        (g2,), (m2,) = outer_opt.outer_step(
+            (g,), (delta,), (m,),
+            lr=dcfg.outer_lr, mu=dcfg.outer_momentum, nesterov=dcfg.nesterov,
+        )
+        new_g.append(g2)
+        new_m.append(m2)
+        new_i.append(jnp.broadcast_to(g2[None].astype(p.dtype), p.shape))
+
+    return {
+        **state,
+        "global_params": jax.tree.unflatten(treedef, new_g),
+        "inner_params": jax.tree.unflatten(treedef, new_i),
+        "outer_m": jax.tree.unflatten(treedef, new_m),
+    }
+
+
+def streaming_train_step(trainer, state: dict, batch: dict):
+    """Python-scheduled streaming step (inner step + any due fragments)."""
+    state, metrics = trainer.inner_step(state, batch)
+    step = int(state["step"])
+    for frag in fragments_due(step, trainer.dcfg.streaming_fragments, trainer.dcfg.sync_every):
+        state = outer_sync_fragment(trainer, state, frag)
+    return state, metrics

@@ -1,0 +1,78 @@
+"""Idealized wall-clock time model (paper Appendix A).
+
+Computation: C = 6·N·D flops over R chips of Q flops/s each.
+Communication: bandwidth-optimal all-reduce of N params over R nodes in a
+(W, ε) network takes 2·N_bits/W·(1−1/R) + ε  [Patarasuk & Yuan 2009].
+
+Data-Parallel:   all-reduce over the CROSS-datacenter network every step.
+DiLoCo M=1:      same per-step all-reduce + outer all-reduce every H steps.
+DiLoCo M≥2:      per-step all-reduce stays INSIDE a datacenter (R/M nodes,
+                 high-bandwidth net); outer all-reduce crosses every H steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Network:
+    name: str
+    bandwidth: float   # bits / s
+    latency: float     # s
+
+
+HIGH = Network("high", 400e9, 1e-4)
+MEDIUM = Network("medium", 100e9, 1e-3)
+LOW = Network("low", 10e9, 1e-2)
+
+CHIP_FLOPS = 300e12        # Appendix A: between v5e (197) and v6e (918) @50% MFU
+BITS_PER_PARAM = 16        # bf16 weights/grads (paper §3)
+TOKENS_PER_CHIP = 8192     # idealized chips R ∝ global batch (Appendix A.3)
+
+
+def num_chips(batch_tokens: int) -> int:
+    return max(1, batch_tokens // TOKENS_PER_CHIP)
+
+
+def allreduce_time(n_params: float, r_nodes: int, net: Network, bits=BITS_PER_PARAM) -> float:
+    if r_nodes <= 1:
+        return 0.0
+    return 2.0 * n_params * bits / net.bandwidth * (1.0 - 1.0 / r_nodes) + net.latency
+
+
+def compute_time(n_params: float, tokens: float, r_chips: int, q=CHIP_FLOPS) -> float:
+    return 6.0 * n_params * tokens / (r_chips * q)
+
+
+def train_time(
+    n_params: float,
+    token_budget: float,
+    batch_tokens: int,
+    *,
+    algorithm: str,          # "dp" | "diloco"
+    m_replicas: int = 1,
+    sync_every: int = 30,
+    cross_net: Network = MEDIUM,
+    within_net: Network = HIGH,
+) -> dict:
+    """End-to-end idealized wall-clock seconds (Appendix A.3)."""
+    steps = token_budget / batch_tokens
+    r = num_chips(batch_tokens)
+    comp = compute_time(n_params, token_budget, r)
+
+    if algorithm == "dp":
+        comm = allreduce_time(n_params, r, cross_net) * steps
+    elif m_replicas == 1:
+        per_step = allreduce_time(n_params, r, cross_net)
+        comm = per_step * steps * (1.0 + 1.0 / sync_every)
+    else:
+        inner = allreduce_time(n_params, max(r // m_replicas, 1), within_net) * steps
+        outer = allreduce_time(n_params, r, cross_net) * steps / sync_every
+        comm = inner + outer
+    return {
+        "steps": steps,
+        "chips": r,
+        "compute_s": comp,
+        "comm_s": comm,
+        "total_s": comp + comm,
+    }

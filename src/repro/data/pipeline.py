@@ -1,0 +1,118 @@
+"""Deterministic, shardable LM data pipeline.
+
+Two sources:
+
+* ``SyntheticLM`` — a mixture of hidden-domain Markov chains with Zipf-ish
+  marginals.  Learnable structure (in-context domain inference + per-domain
+  transition tables) so eval loss decreases with model capacity — this is
+  the container-offline stand-in for C4/Dolma (see DESIGN.md §9).
+* ``TokenFileSource`` — memory-mapped binary token files for real corpora.
+
+Both are *stateless*: ``batch(step, replica, ...)`` is a pure function of
+its arguments, so checkpoint/restart resumes the stream exactly (the data
+cursor IS the step counter), and each DiLoCo replica m reads its own shard
+D_m (paper Algorithm 1 line 4) by folding the replica id into the PRNG key.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab_size: int = 256
+    seq_len: int = 256
+    n_domains: int = 8
+    temperature: float = 1.2
+    seed: int = 1234
+    eval_offset: int = 1 << 30   # eval stream lives in a disjoint key region
+
+    def __post_init__(self):
+        root = jax.random.PRNGKey(self.seed)
+        k_trans, k_marg = jax.random.split(root)
+        # per-domain transition logits, sparsified so chains are learnable
+        logits = jax.random.normal(
+            k_trans, (self.n_domains, self.vocab_size, self.vocab_size)
+        ) * self.temperature
+        # Zipf-flavored marginal bias shared across domains
+        zipf = -jnp.log(jnp.arange(1, self.vocab_size + 1, dtype=jnp.float32))
+        self._logits = logits + 0.5 * zipf[None, None, :]
+        self._root = root
+        self._gen_jit = jax.jit(self._gen, static_argnums=(1,))
+
+    # -- internals ---------------------------------------------------------
+    def _gen(self, key: jax.Array, n_seqs: int) -> jax.Array:
+        """Generate (n_seqs, seq_len+1) tokens."""
+        kd, k0, kc = jax.random.split(key, 3)
+        domains = jax.random.randint(kd, (n_seqs,), 0, self.n_domains)
+        first = jax.random.randint(k0, (n_seqs,), 0, self.vocab_size)
+        table = self._logits[domains]  # (n, V, V)
+
+        def step(tok, k):
+            nxt = jax.random.categorical(k, jnp.take_along_axis(
+                table, tok[:, None, None], axis=1)[:, 0, :])
+            return nxt, nxt
+
+        keys = jax.random.split(kc, self.seq_len)
+        _, seq = jax.lax.scan(step, first, keys)
+        return jnp.concatenate([first[None], seq], axis=0).T  # (n, L+1)
+
+    # -- public API ------------------------------------------------------------
+    def batch(self, step: int, replica: int, num_replicas: int, batch_seqs: int, *, eval: bool = False) -> dict:
+        """Batch for one replica at one step: {"tokens","labels"} (b, seq_len)."""
+        key = self._root
+        if eval:
+            key = jax.random.fold_in(key, self.eval_offset)
+        key = jax.random.fold_in(key, int(step))
+        key = jax.random.fold_in(key, int(replica) + num_replicas * 7919)
+        toks = self._gen_jit(key, batch_seqs)
+        return {"tokens": toks[:, :-1].astype(jnp.int32), "labels": toks[:, 1:].astype(jnp.int32)}
+
+    def global_batch(self, step: int, num_replicas: int, batch_seqs_per_replica: int, *, eval: bool = False) -> dict:
+        """Stacked per-replica batches: leading axis M (DiLoCo data shards)."""
+        bs = [
+            self.batch(step, m, num_replicas, batch_seqs_per_replica, eval=eval)
+            for m in range(num_replicas)
+        ]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
+
+    def entropy_floor(self, n_samples: int = 4096) -> float:
+        """Monte-Carlo conditional entropy of the source = best achievable nll."""
+        probs = jax.nn.softmax(self._logits, axis=-1)
+        h = -(probs * jnp.log(probs + 1e-20)).sum(-1)  # (D, V)
+        return float(h.mean())
+
+
+@dataclasses.dataclass
+class TokenFileSource:
+    """Memory-mapped uint16/uint32 token file, chunked into sequences."""
+
+    path: str
+    seq_len: int
+    dtype: str = "uint16"
+
+    def __post_init__(self):
+        self._data = np.memmap(self.path, dtype=self.dtype, mode="r")
+        self._n_seqs = (len(self._data) - 1) // self.seq_len
+
+    def batch(self, step: int, replica: int, num_replicas: int, batch_seqs: int, *, eval: bool = False) -> dict:
+        # replica-strided disjoint shards; deterministic in (step, replica)
+        base = (step * num_replicas + replica) * batch_seqs
+        idx = (base + np.arange(batch_seqs)) % self._n_seqs
+        starts = idx * self.seq_len
+        toks = np.stack([self._data[s : s + self.seq_len + 1] for s in starts]).astype(np.int32)
+        return {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+
+    def global_batch(self, step: int, num_replicas: int, batch_seqs_per_replica: int, *, eval: bool = False) -> dict:
+        bs = [
+            self.batch(step, m, num_replicas, batch_seqs_per_replica, eval=eval)
+            for m in range(num_replicas)
+        ]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *bs)

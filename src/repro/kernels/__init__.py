@@ -1,0 +1,16 @@
+# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
+# for compute hot-spots the paper itself optimizes with a custom
+# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package ships three modules:
+  * ``<name>.py`` — the ``pl.pallas_call`` kernel with explicit BlockSpec
+    VMEM tiling (TPU is the target; validated with ``interpret=True`` on CPU)
+  * ``ops.py``    — the jit'd public wrapper (custom_vjp where trainable)
+  * ``ref.py``    — the pure-jnp oracle used by the allclose test sweeps
+
+Kernels: flash_attention (training/prefill hot spot), fused_adamw (inner
+optimizer), outer_nesterov (DiLoCo outer step), delta_quant (int8 outer-Δ
+compression for the cross-pod all-reduce), ssd_scan (Mamba-2 intra-chunk).
+"""
+INTERPRET = True  # CPU container: run kernels in interpret mode; False on TPU

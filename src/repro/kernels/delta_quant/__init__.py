@@ -1,0 +1,1 @@
+from repro.kernels.delta_quant.ops import quantize, dequantize  # noqa: F401

@@ -1,0 +1,61 @@
+"""Int8 block-quantization kernels for DiLoCo outer-Δ compression.
+
+Symmetric int8 with one fp32 scale per (ROWS, 128) VMEM tile — the payload
+crossing the cross-datacenter link is 1 byte/param + 4/(ROWS*128) bytes of
+scale (vs 4 fp32 / 2 bf16), a 2-4x cut of the paper's Table-6 bandwidth
+requirements on top of the 1/H factor.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 256
+LANES = 128
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[0, 0] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[0, 0]
+
+
+def quant_blocks(x, *, interpret: bool = True):
+    rows = x.shape[0]
+    nb = -(-rows // ROWS)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((ROWS, LANES), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, jnp.int8),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def dequant_blocks(q, s, *, interpret: bool = True):
+    rows = q.shape[0]
+    nb = -(-rows // ROWS)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        interpret=interpret,
+    )(q, s)

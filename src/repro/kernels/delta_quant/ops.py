@@ -1,0 +1,32 @@
+"""Public int8 block-quant ops (any tensor shape)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro import kernels
+from repro.kernels.delta_quant import delta_quant as fk
+
+LANES = fk.LANES
+
+
+def _to_lanes(x):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rows = -(-n // LANES)
+    rows = -(-rows // fk.ROWS) * fk.ROWS  # pad to whole VMEM blocks
+    if rows * LANES - n:
+        flat = jnp.pad(flat, (0, rows * LANES - n))
+    return flat.reshape(rows, LANES), n
+
+
+def quantize(x):
+    """Returns (q int8 (R,128), scales (nb,1) f32, meta) for any-shape x."""
+    x2, n = _to_lanes(x)
+    q, s = fk.quant_blocks(x2, interpret=kernels.INTERPRET)
+    return q, s, (x.shape, n)
+
+
+def dequantize(q, s, meta, dtype=jnp.float32):
+    shape, n = meta
+    x = fk.dequant_blocks(q, s, interpret=kernels.INTERPRET)
+    return x.reshape(-1)[:n].reshape(shape).astype(dtype)

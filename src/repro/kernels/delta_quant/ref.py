@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the int8 block-quant kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+ROWS = 256
+LANES = 128
+
+
+def quantize_ref(x2d):
+    """x2d: (R, 128) -> (q int8 (R,128), scales (ceil(R/ROWS), 1))."""
+    rows = x2d.shape[0]
+    nb = -(-rows // ROWS)
+    pad = nb * ROWS - rows
+    xp = jnp.pad(x2d, ((0, pad), (0, 0))).reshape(nb, ROWS, LANES).astype(jnp.float32)
+    scales = jnp.maximum(jnp.abs(xp).max(axis=(1, 2)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xp / scales[:, None, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(nb * ROWS, LANES)[:rows], scales[:, None]
+
+
+def dequantize_ref(q2d, scales):
+    rows = q2d.shape[0]
+    nb = scales.shape[0]
+    pad = nb * ROWS - rows
+    qp = jnp.pad(q2d, ((0, pad), (0, 0))).reshape(nb, ROWS, LANES)
+    x = qp.astype(jnp.float32) * scales[:, :, None]
+    return x.reshape(nb * ROWS, LANES)[:rows]

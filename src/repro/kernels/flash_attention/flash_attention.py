@@ -1,0 +1,230 @@
+"""Flash attention Pallas TPU kernels (forward + backward).
+
+Online-softmax tiling: grid (batch*q_heads, q_blocks, k_blocks), with the
+k-block axis innermost; running (m, l, acc) state lives in VMEM scratch and
+survives across k iterations of one q block.  Blocks are (BQ, head_dim) /
+(BK, head_dim) — 128x128 by default, MXU-aligned.  GQA is handled in the
+BlockSpec index maps (q head h reads kv head h // group) so K/V are never
+materialized per-q-head.
+
+VMEM budget per program instance (BQ=BK=128, hd<=256, fp32 scratch):
+  q, k, v blocks: 3 * 128 * 256 * 2B = 192KB; acc/m/l: ~132KB; s/p: 64KB
+  -> well under the ~16MB v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
+                *, scale, causal, bq, bk, n_k):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                 # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                 # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (bq, bk)
+
+    if causal:
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    # guard fully-masked blocks: exp(NEG_INF - NEG_INF) would be 1
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[...] + p.sum(axis=1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(p, v)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse_ref[0] = (m_ref[..., 0] + jnp.log(l[..., 0])).astype(lse_ref.dtype)
+
+
+def flash_fwd(q, k, v, *, causal: bool, group: int, bq: int = 128, bk: int = 128,
+              interpret: bool = True):
+    """q: (BH, Sq, D); k/v: (BKV, Skv, D) with BH = BKV * group.
+    Returns (o (BH, Sq, D), lse (BH, Sq) fp32)."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    n_q, n_k = sq // bq, skv // bk
+    assert sq % bq == 0 and skv % bk == 0, (sq, skv, bq, bk)
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=d ** -0.5, causal=causal, bq=bq, bk=bk, n_k=n_k
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((bh, sq), jnp.float32),
+        ],
+        scratch_shapes=_scratch(bq, d),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _scratch(bq, d):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return [
+        pltpu.VMEM((bq, d), jnp.float32),
+        pltpu.VMEM((bq, 1), jnp.float32),
+        pltpu.VMEM((bq, 1), jnp.float32),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Backward
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   acc_ref, *, scale, causal, bq, bk, n_k):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]                                   # (bq,)
+    delta = delta_ref[0]                               # (bq,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    if causal:
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))   # (bq, bk)
+    ds = p * (dp - delta[:, None]) * scale
+    acc_ref[...] += jax.lax.dot(ds, k)
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        dq_ref[0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, dk_acc, dv_acc, *, scale, causal, bq, bk, n_q, group):
+    qi = pl.program_id(2)   # innermost: q blocks
+    ki = pl.program_id(1)
+    b = pl.program_id(0)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (bq, bk)
+    if causal:
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])                                   # (bq, bk)
+    dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))  # (bk, d)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+    ds = p * (dp - delta[:, None]) * scale
+    dk_acc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())))  # (bk, d)
+
+    @pl.when(qi == n_q - 1)
+    def _done():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_bwd(q, k, v, o, lse, do, *, causal: bool, group: int,
+              bq: int = 128, bk: int = 128, interpret: bool = True):
+    """Returns (dq (BH,Sq,D), dk (BH,Skv,D)-per-q-head, dv same).
+
+    dk/dv are computed per q-head and summed over the GQA group by the
+    caller (ops.py) — keeps the kernel's write pattern conflict-free.
+    """
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    n_q, n_k = sq // bq, skv // bk
+    delta = jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32), axis=-1)  # (BH, Sq)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, scale=d ** -0.5, causal=causal,
+                          bq=bq, bk=bk, n_k=n_k),
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=_scratch(bq, d)[:1],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, scale=d ** -0.5, causal=causal,
+                          bq=bq, bk=bk, n_q=n_q, group=group),
+        grid=(bh, n_k, n_q),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j, i, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j, i, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, bq, d), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, j, i: (b, i)),
+            pl.BlockSpec((1, bq), lambda b, j, i: (b, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, d), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j, i: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, skv, d), q.dtype),   # per-q-head dk
+            jax.ShapeDtypeStruct((bh, skv, d), q.dtype),
+        ],
+        scratch_shapes=[_scratch(bk, d)[0], _scratch(bk, d)[0]],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv

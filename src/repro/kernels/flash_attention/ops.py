@@ -1,0 +1,53 @@
+"""Public flash-attention op: jit'd, differentiable (custom_vjp)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels
+from repro.kernels.flash_attention import flash_attention as fk
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, bq: int = 128, bk: int = 128):
+    """q: (BH, Sq, D); k/v: (BKV, Skv, D); BH % BKV == 0 (GQA)."""
+    o, _ = _fwd(q, k, v, causal, bq, bk)
+    return o
+
+
+def _fwd(q, k, v, causal, bq, bk):
+    group = q.shape[0] // k.shape[0]
+    o, lse = fk.flash_fwd(
+        q, k, v, causal=causal, group=group, bq=bq, bk=bk, interpret=kernels.INTERPRET
+    )
+    return o, (q, k, v, o, lse)
+
+
+def _bwd(causal, bq, bk, res, do):
+    q, k, v, o, lse = res
+    group = q.shape[0] // k.shape[0]
+    dq, dk_h, dv_h = fk.flash_bwd(
+        q, k, v, o, lse, do, causal=causal, group=group, bq=bq, bk=bk,
+        interpret=kernels.INTERPRET,
+    )
+    # dk/dv were computed per q-head: sum over the GQA group
+    bkv, skv, d = k.shape
+    dk = dk_h.reshape(bkv, group, skv, d).sum(axis=1).astype(k.dtype)
+    dv = dv_h.reshape(bkv, group, skv, d).sum(axis=1).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+def mha_flash(q, k, v, *, causal: bool = True):
+    """(b, t, nh, hd) x (b, s, nkv, hd) convenience wrapper."""
+    b, t, nh, hd = q.shape
+    s, nkv = k.shape[1], k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * nh, t, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * nkv, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * nkv, s, hd)
+    of = flash_attention(qf, kf, vf, causal)
+    return of.reshape(b, nh, t, hd).transpose(0, 2, 1, 3)

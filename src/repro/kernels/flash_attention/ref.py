@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash-attention kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool):
+    """q: (BH, Sq, D); k/v: (BKV, Skv, D); GQA group = BH // BKV."""
+    bh, sq, d = q.shape
+    bkv, skv, _ = k.shape
+    group = bh // bkv
+    kr = jnp.repeat(k, group, axis=0)
+    vr = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    s = s * (d ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), jnp.bool_), k=skv - sq)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqk,bkd->bqd", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)

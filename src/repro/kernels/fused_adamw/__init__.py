@@ -1,0 +1,1 @@
+from repro.kernels.fused_adamw.ops import fused_adamw  # noqa: F401

@@ -1,0 +1,40 @@
+"""Public fused-AdamW op: pads/reshapes any tensor to (R, 128) lanes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels
+from repro.kernels.fused_adamw import fused_adamw as fk
+
+LANES = fk.LANES
+
+
+def _to_lanes(x):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rows = -(-n // LANES)
+    rows = -(-rows // fk.ROWS) * fk.ROWS  # pad to whole VMEM blocks
+    pad = rows * LANES - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows, LANES), n
+
+
+def fused_adamw(p, g, m, v, *, lr, b1, b2, eps, weight_decay, bc1, bc2):
+    """Fused AdamW step for one tensor. Returns (p', m', v')."""
+    shape, dtype = p.shape, p.dtype
+    p2, n = _to_lanes(p)
+    g2, _ = _to_lanes(g)
+    m2, _ = _to_lanes(m)
+    v2, _ = _to_lanes(v)
+    scalars = jnp.stack(
+        [jnp.asarray(lr, jnp.float32), jnp.asarray(bc1, jnp.float32),
+         jnp.asarray(bc2, jnp.float32), jnp.zeros((), jnp.float32)]
+    ).reshape(1, 4)
+    p3, m3, v3 = fk.adamw_blocks(
+        p2, g2, m2, v2, scalars, b1=b1, b2=b2, eps=eps,
+        weight_decay=weight_decay, interpret=kernels.INTERPRET,
+    )
+    unflat = lambda a, dt: a.reshape(-1)[:n].reshape(shape).astype(dt)
+    return unflat(p3, dtype), unflat(m3, jnp.float32), unflat(v3, jnp.float32)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused AdamW kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def adamw_ref(p, g, m, v, *, lr, b1, b2, eps, weight_decay, bc1, bc2):
+    g32 = g.astype(jnp.float32)
+    m = b1 * m + (1.0 - b1) * g32
+    v = b2 * v + (1.0 - b2) * jnp.square(g32)
+    mhat = m / bc1
+    vhat = v / bc2
+    step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+    return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v

@@ -1,0 +1,1 @@
+from repro.kernels.outer_nesterov.ops import outer_nesterov  # noqa: F401

@@ -1,0 +1,34 @@
+"""Public fused outer-step op."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro import kernels
+from repro.kernels.outer_nesterov import outer_nesterov as fk
+
+LANES = fk.LANES
+
+
+def _to_lanes(x, lead=()):
+    flat = x.reshape(*lead, -1)
+    n = flat.shape[-1]
+    rows = -(-n // LANES)
+    rows = -(-rows // fk.ROWS) * fk.ROWS  # pad to whole VMEM blocks
+    pad = rows * LANES - n
+    if pad:
+        flat = jnp.pad(flat, [(0, 0)] * len(lead) + [(0, pad)])
+    return flat.reshape(*lead, rows, LANES), n
+
+
+def outer_nesterov(g, deltas, m, *, lr, mu, nesterov=True):
+    """g: params tensor; deltas: (M, *g.shape); m: fp32 momentum tensor."""
+    shape, dtype = g.shape, g.dtype
+    num = deltas.shape[0]
+    g2, n = _to_lanes(g)
+    d2, _ = _to_lanes(deltas, lead=(num,))
+    m2, _ = _to_lanes(m)
+    g3, m3 = fk.outer_blocks(
+        g2, d2, m2, lr=lr, mu=mu, nesterov=nesterov, interpret=kernels.INTERPRET
+    )
+    unflat = lambda a, dt: a.reshape(-1)[:n].reshape(shape).astype(dt)
+    return unflat(g3, dtype), unflat(m3, jnp.float32)

@@ -1,0 +1,54 @@
+"""Fused DiLoCo outer step kernel: Δ-average + Nesterov momentum + update.
+
+Inputs: global params θ (R,128), the M per-replica deltas stacked (M,R,128)
+(post all-reduce these are identical shards; pre-reduce this kernel also
+fuses the local mean), momentum buffer (R,128).  One pass produces
+(θ', momentum').  lr/μ are compile-time constants (paper: constant η).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 256
+LANES = 128
+
+
+def _outer_kernel(g_ref, d_ref, m_ref, g_out, m_out, *, lr, mu, nesterov, num_replicas):
+    # d_ref: (M, ROWS, LANES) — fuse the replica mean with the update
+    d = d_ref[...].astype(jnp.float32).sum(axis=0) * (1.0 / num_replicas)
+    m_new = mu * m_ref[...] + d
+    step = d + mu * m_new if nesterov else m_new
+    g_out[...] = (g_ref[...].astype(jnp.float32) - lr * step).astype(g_out.dtype)
+    m_out[...] = m_new
+
+
+def outer_blocks(g, d, m, *, lr, mu, nesterov, interpret: bool = True):
+    """g/m: (R, 128); d: (M, R, 128)."""
+    rows = g.shape[0]
+    num_replicas = d.shape[0]
+    nb = -(-rows // ROWS)
+    kernel = functools.partial(
+        _outer_kernel, lr=lr, mu=mu, nesterov=nesterov, num_replicas=num_replicas
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((num_replicas, ROWS, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(g.shape, g.dtype),
+            jax.ShapeDtypeStruct(m.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, d, m)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused outer-Nesterov kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def outer_ref(g, deltas, m, *, lr, mu, nesterov):
+    """g: params; deltas: (M, *g.shape); m: momentum fp32."""
+    d = deltas.astype(jnp.float32).mean(axis=0)
+    m_new = mu * m + d
+    step = d + mu * m_new if nesterov else m_new
+    return (g.astype(jnp.float32) - lr * step).astype(g.dtype), m_new

@@ -1,0 +1,1 @@
+from repro.kernels.ssd_scan.ops import ssd_chunk_scan  # noqa: F401

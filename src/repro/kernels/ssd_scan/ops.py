@@ -1,0 +1,52 @@
+"""Public SSD op: Pallas intra-chunk kernel + jnp inter-chunk recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels
+from repro.kernels.ssd_scan import ssd_scan as fk
+
+
+def ssd_chunk_scan(x, dt, A, B, C, chunk: int, head_tile: int = 8):
+    """Full SSD. x: (b, l, h, p); dt: (b, l, h); A: (h,); B/C: (b, l, g, n).
+    Returns (y (b, l, h, p), final_state (b, h, p, n))."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    nc = l // chunk
+    assert l % chunk == 0
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    xc = x.reshape(b * nc, chunk, h, p)
+    dtc = dt.reshape(b * nc, chunk, h)
+    Bc = Bh.reshape(b * nc, chunk, h, n)
+    Cc = Ch.reshape(b * nc, chunk, h, n)
+
+    y_intra, S, decay = fk.ssd_intra(
+        xc, dtc, A, Bc, Cc, head_tile=head_tile, interpret=kernels.INTERPRET
+    )
+    y_intra = y_intra.reshape(b, nc, chunk, h, p)
+    S = S.reshape(b, nc, h, p, n)
+    decay = decay.reshape(b, nc, h)
+
+    # inter-chunk recurrence (cheap, jnp)
+    def step(carry, inp):
+        s_new, dec = inp
+        s = carry * dec[:, :, None, None] + s_new
+        return s, carry
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev = jax.lax.scan(
+        step, s0, (jnp.moveaxis(S, 1, 0), jnp.moveaxis(decay, 1, 0))
+    )
+    prev = jnp.moveaxis(prev, 0, 1)                        # (b, nc, h, p, n)
+
+    # y_inter = (C ⊙ exp(cum)) @ S_prev  — recompute cum cheaply in jnp
+    dA = dt.astype(jnp.float32) * A.astype(jnp.float32)
+    cum = jnp.cumsum(dA.reshape(b, nc, chunk, h), axis=2)
+    wC = Ch.reshape(b, nc, chunk, h, n).astype(jnp.float32) * jnp.exp(cum)[..., None]
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", wC, prev)
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(b, l, h, p)
+    return y.astype(x.dtype), final.astype(x.dtype)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle: full SSD (chunked reference from models/mamba2.py)."""
+from __future__ import annotations
+
+from repro.models.mamba2 import ssd_chunked  # the framework's jnp reference
+
+
+def ssd_ref(x, dt, A, B, C, chunk):
+    """x: (b, l, h, p); dt: (b, l, h); A: (h,); B/C: (b, l, g, n)."""
+    return ssd_chunked(x, dt, A, B, C, chunk)

@@ -1,0 +1,89 @@
+"""Mamba-2 SSD intra-chunk Pallas kernel (TPU adaptation).
+
+The GPU Mamba-2 kernels use a parallel associative scan; on TPU we use the
+*dual (chunked) form*: within a chunk of Q tokens the SSM is two MXU matmuls
+masked by the decay matrix L, plus a per-chunk state summary.  This kernel
+computes, per (batch, chunk, head-tile):
+
+    y_intra = (C B^T ⊙ L ⊙ dt) X          (Q x Q quadratic part)
+    S_chunk = (B ⊙ dt·decay_to_end)^T X    (n x p state summary)
+    decay   = exp(sum dA)                  (chunk decay factor)
+
+The cheap inter-chunk recurrence (carry S across chunks) stays in jnp in
+ops.py — it is O(h·p·n) per chunk and bandwidth-trivial.
+
+Grid: (batch*chunks, head_tiles). Block = one chunk of HT heads:
+VMEM per instance (Q=128, HT=8, p=64, n=128, fp32):
+  x: 128*8*64*4 = 256KB; B,C: 128*8*128*4 = 512KB each; L/att: 128*128*8*4
+  = 512KB; y: 256KB; S: 8*64*128*4 = 256KB  ->  ~2.3MB, fits v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, d_ref, *, q):
+    # blocks: x (1, q, ht, p); dt (1, q, ht); a (ht,); b/c (1, q, ht, n)
+    x = x_ref[0].astype(jnp.float32)          # (q, ht, p)
+    dt = dt_ref[0].astype(jnp.float32)        # (q, ht)
+    A = a_ref[...].astype(jnp.float32)        # (ht,)
+    B = b_ref[0].astype(jnp.float32)          # (q, ht, n)
+    C = c_ref[0].astype(jnp.float32)          # (q, ht, n)
+
+    dA = dt * A[None, :]                      # (q, ht) <= 0
+    cum = jnp.cumsum(dA, axis=0)              # (q, ht)
+    total = cum[-1, :]                        # (ht,)
+
+    # L[i, j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, None, :] - cum[None, :, :]  # (q, q, ht)
+    iq = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jq = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where((iq >= jq)[:, :, None], jnp.exp(diff), 0.0)
+
+    cb = jnp.einsum("ihn,jhn->ijh", C, B)     # (q, q, ht)
+    w = cb * L * dt[None, :, :]               # weight for x_j
+    y_ref[0] = jnp.einsum("ijh,jhp->ihp", w, x).astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(total[None, :] - cum)         # (q, ht)
+    wB = B * (dt * decay_to_end)[:, :, None]             # (q, ht, n)
+    s_ref[0] = jnp.einsum("qhn,qhp->hpn", wB, x).astype(s_ref.dtype)
+    d_ref[0] = jnp.exp(total).astype(d_ref.dtype)
+
+
+def ssd_intra(x, dt, A, B, C, *, head_tile: int = 8, interpret: bool = True):
+    """x: (BC, Q, H, P); dt: (BC, Q, H); A: (H,); B/C: (BC, Q, H, N)
+    where BC = batch*chunks (chunks independent for the intra part).
+    Returns (y_intra (BC,Q,H,P), S (BC,H,P,N), decay (BC,H), cum_exp? no).
+    """
+    bc, q, h, p = x.shape
+    n = B.shape[-1]
+    ht = min(head_tile, h)
+    assert h % ht == 0, (h, ht)
+    grid = (bc, h // ht)
+    kernel = functools.partial(_ssd_kernel, q=q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, ht, p), lambda b, t: (b, 0, t, 0)),
+            pl.BlockSpec((1, q, ht), lambda b, t: (b, 0, t)),
+            pl.BlockSpec((ht,), lambda b, t: (t,)),
+            pl.BlockSpec((1, q, ht, n), lambda b, t: (b, 0, t, 0)),
+            pl.BlockSpec((1, q, ht, n), lambda b, t: (b, 0, t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, ht, p), lambda b, t: (b, 0, t, 0)),
+            pl.BlockSpec((1, ht, p, n), lambda b, t: (b, t, 0, 0)),
+            pl.BlockSpec((1, ht), lambda b, t: (b, t)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bc, q, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bc, h, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((bc, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, B, C)

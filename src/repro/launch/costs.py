@@ -1,0 +1,93 @@
+"""Analytic cost model (napkin math, per DESIGN.md §Perf methodology).
+
+Used two ways:
+ 1. cross-check of the HLO-derived numbers for unrolled dry-run cells;
+ 2. primary flops/bytes source for the few cells whose chunk/layer loops
+    stay as ``lax.scan`` (XLA cost_analysis counts scan bodies once —
+    a known artifact), marked "analytic" in EXPERIMENTS.md.
+
+Conventions: matmul flops = 2*m*n*k; causal attention halves the quadratic
+term; backward = 2x forward; full remat adds ~1x forward recompute.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+def _attn_fwd_flops(cfg: ModelConfig, tq: int, tkv: int, causal: bool) -> float:
+    f = 4.0 * tq * tkv * cfg.n_heads * cfg.head_dim  # QK^T + PV
+    if causal and tq == tkv:
+        f /= 2
+    return f
+
+
+def _ssd_fwd_flops(cfg: ModelConfig, t: int) -> float:
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    q = min(cfg.ssm_chunk, t)
+    nc = max(t // q, 1)
+    per_chunk = (
+        2.0 * q * q * h * n      # C_i B_j^T
+        + 2.0 * q * q * h * p    # L-weighted @ X
+        + 2.0 * q * h * n * p    # chunk state (B^T X)
+        + 2.0 * q * h * n * p    # inter-chunk (C S)
+    )
+    return nc * per_chunk
+
+
+def _embed_rows(cfg: ModelConfig) -> int:
+    return cfg.vocab_size * cfg.d_model * (2 if not cfg.tie_embeddings else 1)
+
+
+def fwd_flops_total(cfg: ModelConfig, batch: int, seq: int, *, decode_kv: int = 0) -> float:
+    """Forward flops for `batch` sequences of `seq` tokens (decode: seq=1 and
+    attention runs against a decode_kv-long cache)."""
+    n_active = cfg.active_param_count()
+    matmul_params = n_active - _embed_rows(cfg) + cfg.vocab_size * cfg.d_model  # +unembed matmul
+    tokens = batch * seq
+    total = 2.0 * matmul_params * tokens
+    for i in range(cfg.n_layers):
+        if cfg.layer_kind(i) == "attn":
+            tkv = decode_kv if decode_kv else seq
+            total += batch * _attn_fwd_flops(cfg, seq, tkv, causal=True)
+        else:
+            if decode_kv:
+                total += batch * 8.0 * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state
+            else:
+                total += batch * _ssd_fwd_flops(cfg, seq)
+    for _ in range(cfg.encoder_layers):
+        tf = cfg.n_frontend_tokens
+        total += batch * _attn_fwd_flops(cfg, tf, tf, causal=False)
+        # cross-attention of each decoded token over encoder output
+        total += batch * 4.0 * seq * tf * cfg.n_heads * cfg.head_dim / max(cfg.encoder_layers, 1) * cfg.n_layers
+    return total
+
+
+def analytic_costs(cfg: ModelConfig, shape: ShapeSpec, chips: int) -> dict:
+    """{flops_per_dev, bytes_per_dev} under perfect sharding."""
+    p_bytes = cfg.param_count() * 2  # bf16
+    b = shape.global_batch
+    d = cfg.d_model
+    if shape.kind == "train":
+        fwd = fwd_flops_total(cfg, b, shape.seq_len)
+        flops = 4.0 * fwd  # fwd + 2x bwd + 1x remat recompute
+        act = b * shape.seq_len * d * 2.0 * cfg.n_layers * 4  # boundaries, fwd w + bwd r + recompute
+        opt = cfg.param_count() * (8 + 8 + 8)   # m,v fp32 rw + grads fp32 rw
+        byts = p_bytes * 3 + opt + act
+    elif shape.kind == "prefill":
+        flops = fwd_flops_total(cfg, b, shape.seq_len)
+        kv_write = 2.0 * sum(
+            1 for i in range(cfg.n_layers) if cfg.layer_kind(i) == "attn"
+        ) * b * shape.seq_len * cfg.n_kv_heads * cfg.head_dim * 2
+        act = b * shape.seq_len * d * 2.0 * cfg.n_layers * 2
+        byts = p_bytes + act + kv_write
+    else:  # decode
+        flops = fwd_flops_total(cfg, b, 1, decode_kv=shape.seq_len)
+        kv_read = 2.0 * sum(
+            1 for i in range(cfg.n_layers) if cfg.layer_kind(i) == "attn"
+        ) * b * shape.seq_len * cfg.n_kv_heads * cfg.head_dim * 2
+        byts = p_bytes + kv_read
+    return {
+        "flops_per_dev": flops / chips,
+        "bytes_per_dev": byts / chips,
+        "flops_total": flops,
+    }

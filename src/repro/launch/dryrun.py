@@ -1,0 +1,349 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent without
+real hardware.
+
+For every (architecture x input-shape) cell, ``.lower().compile()`` must
+succeed on BOTH production meshes:
+
+  * single-pod  (16, 16)      ("data", "model")          — 256 chips
+  * multi-pod   (2, 16, 16)   ("pod", "data", "model")   — 512 chips
+
+Train cells lower the DiLoCo ``train_step`` (fused inner+outer executable —
+the cross-pod outer all-reduce is in the HLO); decode/prefill cells lower
+``serve_step``.
+
+Cost derivation (see EXPERIMENTS.md §Roofline for caveats):
+  * deliverable compile keeps the production scan-over-layers (fast compile,
+    authoritative memory_analysis) — but XLA cost_analysis counts scan
+    bodies ONCE, so per-step flops/collectives are derived from two shallow
+    *probe* compiles (1-group and 2-group unrolled stacks) and extrapolated:
+        total = probe1 + (n_groups - 1) * (probe2 - probe1)
+    This keeps every number HLO-derived (not hand-modelled) while staying
+    compilable on one CPU core.
+  * decode cells unroll fully (single token — small HLO), costs are direct.
+  * the memory term additionally gets an analytic TPU-HBM-traffic estimate
+    (CPU-XLA 'bytes accessed' reflects CPU fusion, not TPU).
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-360m --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs import (
+    ASSIGNED_ARCHS,
+    DiLoCoConfig,
+    OptimizerConfig,
+    TrainConfig,
+    cells,
+    get_config,
+    shape_by_name,
+)
+from repro.core.diloco import make_trainer
+from repro.launch import roofline as rl
+from repro.launch.costs import _ssd_fwd_flops, analytic_costs
+from repro.launch.mesh import make_production_mesh, rules_for
+from repro.models import build_model
+
+
+def _abstract_leading(tree, m: int):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct((m, *s.shape), s.dtype), tree)
+
+
+def _ssd_flops_correction(cfg, shape, multiplier: float) -> float:
+    """Flops hidden inside SSD lax.scan trips beyond the first (total)."""
+    if cfg.ssm_state == 0 or shape.kind == "decode":
+        return 0.0
+    nc = max(shape.seq_len // min(cfg.ssm_chunk, shape.seq_len), 1)
+    n_ssm = sum(1 for i in range(cfg.n_layers) if cfg.layer_kind(i) == "ssm")
+    total = shape.global_batch * n_ssm * _ssd_fwd_flops(cfg, shape.seq_len)
+    return multiplier * total * (nc - 1) / nc
+
+
+def _lower_cell(cfg, shape, mesh, multi_pod, sync_every, dtype, compression):
+    """Lower train_step / serve_step for one cell. Returns (lowered, extra)."""
+    model = build_model(cfg)
+    m_replicas = 2 if multi_pod else 1
+    if shape.kind == "train":
+        tokens_per_step = shape.global_batch * shape.seq_len
+        tcfg = TrainConfig(
+            global_batch_tokens=tokens_per_step, seq_len=shape.seq_len,
+            steps=max(int(20 * cfg.param_count() / tokens_per_step), 1),
+        )
+        dcfg = DiLoCoConfig(num_replicas=m_replicas, sync_every=sync_every,
+                            compression=compression)
+        trainer = make_trainer(model, dcfg, OptimizerConfig(), tcfg)
+        state = trainer.abstract_state(dtype)
+        per_replica = dataclasses.replace(shape, global_batch=shape.global_batch // m_replicas)
+        batch = _abstract_leading(model.input_specs(per_replica, dtype), m_replicas)
+        in_specs = (trainer.state_partition_specs(), trainer.batch_partition_specs(batch))
+        lowered = jax.jit(
+            trainer.train_step, in_shardings=in_specs, out_shardings=(in_specs[0], None)
+        ).lower(state, batch)
+        outer_lowered = jax.jit(
+            trainer.outer_sync, in_shardings=(in_specs[0],), out_shardings=in_specs[0]
+        ).lower(state)
+        return lowered, outer_lowered
+    params = model.abstract_params(dtype)
+    inputs = model.input_specs(shape, dtype)
+    pspecs = model.param_partition_specs()
+    ispecs = model.input_partition_specs(shape, inputs)
+    if shape.kind == "prefill":
+
+        def serve_step(p, inp):
+            batch = {k: v for k, v in inp.items() if k != "cache"}
+            return model.prefill(p, batch, inp["cache"])
+
+    else:
+
+        def serve_step(p, inp):
+            batch = {k: v for k, v in inp.items() if k not in ("cache", "index")}
+            return model.decode_step(p, batch, inp["cache"], inp["index"])
+
+    lowered = jax.jit(
+        serve_step, in_shardings=(pspecs, ispecs), out_shardings=None
+    ).lower(params, inputs)
+    return lowered, None
+
+
+def _probe_cfg(cfg, n_groups_wanted: int):
+    """Shallow unrolled variant with `n_groups_wanted` scan groups of layers."""
+    g = cfg.layer_group
+    n_layers = cfg.first_dense + n_groups_wanted * g
+    enc = min(cfg.encoder_layers, n_groups_wanted) if cfg.encoder_layers else 0
+    return cfg.replace(n_layers=n_layers, encoder_layers=enc, scan_layers=False)
+
+
+def _costs_of(compiled, txt=None) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    txt = txt if txt is not None else compiled.as_text()
+    # bf16-native payload counting (see roofline.collective_traffic docstring)
+    traffic = rl.collective_traffic(txt, f32_as_bf16=True)
+    raw = rl.collective_traffic(txt, f32_as_bf16=False)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": traffic["total_bytes"],
+        "coll_raw_f32": raw["total_bytes"],
+        "traffic": traffic,
+    }
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    *,
+    sync_every: int = 30,
+    dtype=jnp.bfloat16,
+    rule_overrides=None,
+    cfg_overrides=None,
+    dump_hlo: str = "",
+    compression: str = "none",
+    probes: bool = True,
+) -> dict:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = shape_by_name(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    m_replicas = 2 if multi_pod else 1
+    rules = rules_for(
+        arch, shape.kind, multi_pod=multi_pod, global_batch=shape.global_batch,
+        overrides=rule_overrides,
+    )
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        model_flops = 6.0 * n_active * shape.global_batch * shape.seq_len
+    else:
+        model_flops = 2.0 * n_active * shape.global_batch * (
+            shape.seq_len if shape.kind == "prefill" else 1
+        )
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "kind": shape.kind, "replicas": m_replicas,
+        "params_b": cfg.param_count() / 1e9, "active_params_b": n_active / 1e9,
+        "rules": {k: str(v) for k, v in rules.items()},
+    }
+
+    with jax.set_mesh(mesh), sharding.use_rules(rules):
+        # ---- deliverable compile (production config) ---------------------
+        deliver_cfg = cfg if shape.kind != "decode" else cfg.replace(scan_layers=False)
+        t0 = time.time()
+        lowered, outer_lowered = _lower_cell(
+            deliver_cfg, shape, mesh, multi_pod, sync_every, dtype, compression
+        )
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        txt = compiled.as_text()
+        rec["memory"] = rl.memory_stats(compiled)
+        deliver_costs = _costs_of(compiled, txt)
+        rec["hlo_raw"] = {k: deliver_costs[k] for k in ("flops", "bytes", "coll")}
+        if dump_hlo:
+            with open(dump_hlo, "w") as f:
+                f.write(txt)
+
+        if outer_lowered is not None:
+            oc = outer_lowered.compile()
+            otraffic = rl.collective_traffic(oc.as_text())
+            rec["outer_collectives"] = otraffic
+            rec["outer_bytes_per_dev"] = otraffic["total_bytes"]
+            rec["outer_bytes_amortized_per_step"] = otraffic["total_bytes"] / sync_every
+
+        # ---- cost attribution -------------------------------------------
+        if shape.kind == "decode" or not probes:
+            flops_dev = deliver_costs["flops"]
+            coll_dev = deliver_costs["coll"]
+            bytes_dev = deliver_costs["bytes"]
+            rec["cost_source"] = "hlo-direct"
+        else:
+            # two shallow probes -> per-group marginal cost -> extrapolate
+            if cfg.is_encdec:
+                n_groups = cfg.n_layers  # enc/dec stacks scale together (12/12)
+            else:
+                from repro.models.transformer import _plan
+
+                _, n_groups, _ = _plan(cfg)
+            t2 = time.time()
+            p1_l, _ = _lower_cell(_probe_cfg(cfg, 1), shape, mesh, multi_pod,
+                                  sync_every, dtype, compression)
+            c1 = _costs_of(p1_l.compile())
+            p2_l, _ = _lower_cell(_probe_cfg(cfg, 2), shape, mesh, multi_pod,
+                                  sync_every, dtype, compression)
+            c2 = _costs_of(p2_l.compile())
+            rec["probe_s"] = round(time.time() - t2, 1)
+            rec["probes"] = {"c1": {k: c1[k] for k in ("flops", "bytes", "coll")},
+                             "c2": {k: c2[k] for k in ("flops", "bytes", "coll")},
+                             "n_groups": n_groups}
+
+            def extrap(key):
+                body = max(c2[key] - c1[key], 0.0)
+                return c1[key] + (n_groups - 1) * body
+
+            flops_dev = extrap("flops")
+            bytes_dev = extrap("bytes")
+            coll_dev = extrap("coll")
+            rec["cost_source"] = "hlo-probe-extrapolated"
+
+        mult = 4.0 if shape.kind == "train" else 1.0
+        ssd_corr = _ssd_flops_correction(cfg, shape, mult)
+        if ssd_corr:
+            flops_dev += ssd_corr / chips
+            rec["ssd_flops_correction_per_dev"] = ssd_corr / chips
+
+        rec["analytic"] = analytic_costs(cfg, shape, chips)
+        roof = rl.Roofline(
+            flops_per_dev=flops_dev,
+            bytes_per_dev=min(bytes_dev, rec["analytic"]["bytes_per_dev"] * 4),
+            collective_bytes_per_dev=coll_dev,
+            chips=chips,
+            model_flops_total=model_flops,
+        )
+        rec["hlo_bytes_per_dev"] = bytes_dev
+        rec["analytic_bytes_per_dev"] = rec["analytic"]["bytes_per_dev"]
+        rec["roofline"] = roof.as_dict()
+        # multi-pod cells skip probes: roofline numbers valid on single-pod
+        rec["roofline_valid"] = (shape.kind == "decode") or probes
+        rec["ok"] = True
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ASSIGNED_ARCHS) + ["all"], default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="both")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--sync-every", type=int, default=30)
+    ap.add_argument("--compression", default="none", choices=["none", "int8"])
+    ap.add_argument("--dump-hlo", default="")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    # ---- perf-iteration knobs (EXPERIMENTS.md §Perf) ---------------------
+    ap.add_argument("--zero1", action="store_true",
+                    help="ZeRO-1: replicate params over data, shard fp32 moments")
+    ap.add_argument("--expert-cap-shard", action="store_true",
+                    help="MoE: shard the capacity dim over model (defers the AR)")
+    ap.add_argument("--remat-policy", default="", choices=["", "nothing", "save_comm"])
+    ap.add_argument("--moe-group", type=int, default=0)
+    ap.add_argument("--tag", default="", help="suffix for the result key")
+    args = ap.parse_args()
+
+    rule_overrides = {}
+    if args.zero1:
+        rule_overrides.update({"embed": None, "opt_embed": "data"})
+    if args.expert_cap_shard:
+        rule_overrides.update({"expert_cap": "model", "expert_ff": None})
+    rule_overrides = rule_overrides or None
+    cfg_overrides = {}
+    if args.remat_policy:
+        cfg_overrides["remat_policy"] = args.remat_policy
+    if args.moe_group:
+        cfg_overrides["moe_group_size"] = args.moe_group
+
+    archs = list(ASSIGNED_ARCHS) if args.arch == "all" else [args.arch]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for mp in meshes:  # single-pod sweep first (roofline table), then multi-pod
+        for arch in archs:
+            for shape in cells(arch):
+                if args.shape not in ("all", shape.name):
+                    continue
+                key = f"{arch}|{shape.name}|{'2x16x16' if mp else '16x16'}"
+                if args.tag:
+                    key += f"|{args.tag}"
+                if results.get(key, {}).get("ok"):
+                    print(f"[cached] {key}", flush=True)
+                    continue
+                print(f"[run] {key}", flush=True)
+                try:
+                    rec = run_cell(
+                        arch, shape.name, mp,
+                        sync_every=args.sync_every, compression=args.compression,
+                        dump_hlo=args.dump_hlo,
+                        rule_overrides=rule_overrides, cfg_overrides=cfg_overrides,
+                        probes=not args.no_probes and not mp,  # roofline: single-pod
+                    )
+                except Exception as e:
+                    rec = {"ok": False, "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"  FAILED: {rec['error']}", flush=True)
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                if rec.get("ok"):
+                    r = rec["roofline"]
+                    print(
+                        f"  ok compile={rec['compile_s']}s probes={rec.get('probe_s','-')}s "
+                        f"compute={r['compute_s']*1e3:.2f}ms mem={r['memory_s']*1e3:.2f}ms "
+                        f"coll={r['collective_s']*1e3:.2f}ms bn={r['bottleneck']}",
+                        flush=True,
+                    )
+
+    n_ok = sum(1 for v in results.values() if v.get("ok"))
+    print(f"\n{n_ok}/{len(results)} cells ok -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

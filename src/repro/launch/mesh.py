@@ -1,0 +1,109 @@
+"""Production meshes + per-(arch, workload) sharding rules.
+
+The DiLoCo replica axis is bound to the ``pod`` mesh axis (DESIGN.md §3):
+inner-step collectives stay inside a pod; the outer Δ all-reduce is the only
+cross-pod collective.  ``make_production_mesh`` is a FUNCTION so importing
+this module never touches jax device state.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.sharding import DEFAULT_RULES
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(replica: int = 1, data: int = 1, model: int = 1):
+    """Small explicit (replica, data, model) mesh for tests/examples."""
+    return jax.make_mesh(
+        (replica, data, model),
+        ("replica", "data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 3,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sharding-rule selection
+# ---------------------------------------------------------------------------
+
+# Per-arch overrides: dims that do not divide the 16-way model axis fall back
+# to replicated (or to an alternative axis). Kept here — model configs stay
+# hardware-agnostic.
+ARCH_RULE_OVERRIDES = {
+    "granite-moe-3b-a800m": {"heads": None, "experts": None, "expert_ff": "model",
+                             "vocab": None},   # 24 heads / 40 experts / 49155 vocab !% 16
+    "gemma-2b": {"heads": None},               # 8 heads; big dims (ff, vocab) carry TP
+    "smollm-360m": {"heads": None},            # 15 heads
+    "mamba2-130m": {"ssm_heads": None, "vocab": None},  # 24 ssm heads, 50280 vocab
+    "seamless-m4t-medium": {"vocab": None},    # 256206 !% 16
+}
+
+
+def rules_for(
+    arch: str,
+    kind: str,                 # train | prefill | decode
+    *,
+    multi_pod: bool = False,
+    global_batch: Optional[int] = None,
+    data_axis: int = 16,
+    overrides: Optional[dict] = None,
+) -> dict:
+    """Logical->mesh binding for one dry-run cell / training run."""
+    rules = dict(DEFAULT_RULES)
+    rules["replica"] = "pod" if multi_pod else None
+
+    if kind == "decode":
+        # flash-decode style: the KV-cache sequence axis carries the model
+        # axis (q is a single token — gathering it is ~free; softmax partials
+        # all-reduce over "model"). Weights keep their TP sharding.
+        rules["kv_seq"] = "model"
+        rules["groups"] = None       # MoE decode groups are tiny
+        if global_batch is not None and global_batch < data_axis:
+            # long-context single-stream decode: nothing to shard on batch;
+            # spread the cache/sequence over BOTH axes
+            rules["batch"] = None
+            rules["kv_seq"] = ("data", "model")
+    if kind == "prefill":
+        rules["groups"] = "data"
+
+    rules.update(ARCH_RULE_OVERRIDES.get(arch, {}))
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def auto_validate_rules(model, rules: dict, axis_sizes: dict):
+    """Drop logical->mesh bindings whose tensor dims don't divide the axis.
+
+    Safety net behind ARCH_RULE_OVERRIDES: scans every parameter PSpec of
+    the model and replicates (None) any logical axis that would shard a
+    non-divisible dimension (GSPMD would pad; we prefer explicit layouts).
+    Returns (validated_rules, {logical: (dim, mesh_axis, size)} dropped).
+    """
+    import jax
+
+    from repro.models.layers import PSpec
+
+    dropped = {}
+    for leaf in jax.tree.leaves(model.specs(), is_leaf=lambda x: isinstance(x, PSpec)):
+        for dim, ax in zip(leaf.shape, leaf.axes):
+            if ax is None or rules.get(ax) is None:
+                continue
+            mesh_ax = rules[ax]
+            for a in (mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)):
+                size = axis_sizes.get(a, 1)
+                if size > 1 and dim % size:
+                    dropped[ax] = (dim, a, size)
+    out = dict(rules)
+    for ax in dropped:
+        out[ax] = None
+    return out, dropped

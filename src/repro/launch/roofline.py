@@ -1,0 +1,212 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+Terms (per device; ``cost_analysis()`` on a partitioned module reports
+per-device numbers, verified empirically):
+
+    compute    = HLO_FLOPs      / peak_FLOP/s        (197 TFLOP/s bf16, v5e)
+    memory     = HLO_bytes      / HBM_bw             (819 GB/s)
+    collective = wire_bytes     / ICI_bw             (~50 GB/s/link)
+
+``wire_bytes`` is NOT in cost_analysis: we parse the partitioned HLO text
+and sum per-op traffic with bandwidth-optimal ring models:
+
+    all-reduce       2 * size * (n-1)/n      (reduce-scatter + all-gather)
+    all-gather       size_out * (n-1)/n
+    reduce-scatter   size_in  * (n-1)/n
+    all-to-all       size * (n-1)/n
+    collective-permute  size
+
+where ``size`` is the per-device operand size in the partitioned module and
+``n`` the replica-group size parsed from the op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, Optional
+
+# ---- TPU v5e hardware constants (assignment) -------------------------------
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (collective term denominator)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+
+def _shape_bytes(txt: str, f32_bytes: int = 4) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(txt):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * (f32_bytes if dtype == "f32" else _DTYPE_BYTES[dtype])
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_V2_RE.search(line)  # e.g. replica_groups=[32,16] -> 16 per group
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def collective_traffic(hlo_text: str, f32_as_bf16: bool = False) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind, from partitioned HLO text.
+
+    ``f32_as_bf16``: XLA:CPU upcasts bf16 einsums to f32 *before* SPMD
+    partitioning, so activation collectives in a bf16-lowered module print
+    as f32 — on TPU they are bf16.  Setting this counts f32 payloads at
+    2 bytes (used for bf16-dtype dry-run modules; the raw count is also
+    recorded).  Validated by dtype audit of the deepseek-67b probe HLO
+    (EXPERIMENTS.md §Perf iteration 0).
+    """
+    f32_bytes = 2 if f32_as_bf16 else 4
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, _, rhs = stripped.partition("=")
+        op = None
+        for kind in _COLLECTIVES:
+            # match op invocation, not metadata mentions
+            if re.search(rf"(?:^|\)\s|\}}\s|\]\s){kind}(?:-start|-done)?\(", rhs) or rhs.lstrip().startswith(kind):
+                op = kind
+                break
+        if op is None:
+            continue
+        if f"{op}-done" in rhs:
+            continue  # bytes counted on the -start op
+        # output shape(s) sit between '=' and the op name on the RHS
+        head = rhs.split(op)[0]
+        size = _shape_bytes(head, f32_bytes)
+        n = _group_size(rhs)
+        if op == "all-reduce":
+            traffic = 2 * size * (n - 1) / max(n, 1)
+        elif op in ("all-gather", "all-to-all"):
+            traffic = size * (n - 1) / max(n, 1)
+        elif op == "reduce-scatter":
+            traffic = size * (n - 1)  # input = n * output shards
+        else:  # collective-permute
+            traffic = size
+        out[op] += traffic
+        out["count"] += 1
+    out["total_bytes"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_dev: float
+    bytes_per_dev: float
+    collective_bytes_per_dev: float
+    chips: int
+    model_flops_total: float      # 6*N*D (train) / 2*N*D (serve), N=active params
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_dev / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Idealized no-overlap upper bound and roofline lower bound is the
+        max term; we report the max (perfect overlap of the other two)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_total = self.flops_per_dev * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else float("nan")
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        denom = self.step_time_s * PEAK_FLOPS * self.chips
+        return self.model_flops_total / denom if denom else float("nan")
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops_per_dev,
+            "bytes_per_dev": self.bytes_per_dev,
+            "collective_bytes_per_dev": self.collective_bytes_per_dev,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "model_flops_total": self.model_flops_total,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def analyze(compiled, *, chips: int, model_flops_total: float, hlo_text: Optional[str] = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    txt = hlo_text if hlo_text is not None else compiled.as_text()
+    traffic = collective_traffic(txt)
+    return Roofline(
+        flops_per_dev=flops,
+        bytes_per_dev=byts,
+        collective_bytes_per_dev=traffic["total_bytes"],
+        chips=chips,
+        model_flops_total=model_flops_total,
+    )
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_est": int(
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+            ),
+        }
+    except Exception as e:  # CPU backend may not implement everything
+        return {"error": str(e)}

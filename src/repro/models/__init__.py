@@ -1,0 +1,1 @@
+from repro.models.build import build_model  # noqa: F401

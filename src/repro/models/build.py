@@ -1,0 +1,166 @@
+"""Model facade: binds a ModelConfig to init/loss/serve entry points and
+produces dry-run input specs for every (arch x shape) cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec, layers, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- parameters ------------------------------------------------------
+    def specs(self) -> dict:
+        if self.cfg.is_encdec:
+            return encdec.encdec_specs(self.cfg)
+        return transformer.decoder_specs(self.cfg)
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> dict:
+        return layers.init_params(key, self.specs(), dtype)
+
+    def abstract_params(self, dtype=jnp.bfloat16) -> dict:
+        return layers.abstract_params(self.specs(), dtype)
+
+    def param_partition_specs(self, extra_leading=()):
+        return layers.param_partition_specs(self.specs(), extra_leading)
+
+    def param_count(self) -> int:
+        return layers.count_params(self.specs())
+
+    # ---- training ----------------------------------------------------------
+    def loss_fn(self, params: dict, batch: dict):
+        if self.cfg.is_encdec:
+            return encdec.loss_fn(params, batch, self.cfg)
+        return transformer.loss_fn(params, batch, self.cfg)
+
+    # ---- serving -------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.float32):
+        if self.cfg.is_encdec:
+            return encdec.init_cache(self.cfg, batch, max_len, dtype)
+        return transformer.init_cache(self.cfg, batch, max_len, dtype)
+
+    def abstract_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        if self.cfg.is_encdec:
+            return encdec.abstract_cache(self.cfg, batch, max_len, dtype)
+        return transformer.abstract_cache(self.cfg, batch, max_len, dtype)
+
+    def cache_partition_specs(self, cache):
+        if self.cfg.is_encdec:
+            return {
+                "k": sharding.spec(*layers.KV_CACHE_AXES),
+                "v": sharding.spec(*layers.KV_CACHE_AXES),
+            }
+        return transformer.cache_partition_specs(self.cfg, cache)
+
+    def prefill(self, params, batch: dict, cache):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            enc_out = encdec.encode(params, batch["frames"], cfg)
+            logits, new_cache = encdec.decode(
+                params, batch["tokens"], enc_out, cfg, cache=cache, cache_index=0, mode="prefill"
+            )
+            return logits[:, -1:, :], {"kv": new_cache, "enc_out": enc_out}
+        return transformer.prefill(
+            params, batch.get("tokens"), cfg, cache, embeds=batch.get("embeds")
+        )
+
+    def decode_step(self, params, batch: dict, cache, index):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            b = batch["tokens"].shape[0]
+            positions = jnp.broadcast_to(jnp.asarray(index)[None, None], (b, 1))
+            logits, new_kv = encdec.decode(
+                params, batch["tokens"], batch["enc_out"], cfg,
+                cache=cache, cache_index=index, positions=positions, mode="decode",
+            )
+            return logits, new_kv
+        return transformer.decode_step(params, batch["tokens"], cfg, cache, index)
+
+    # ---- dry-run input declarations ---------------------------------------
+    def input_specs(self, shape: ShapeSpec, dtype=jnp.bfloat16) -> dict:
+        """ShapeDtypeStruct stand-ins for one dry-run cell (no allocation)."""
+        cfg = self.cfg
+        b = shape.global_batch
+        i32 = jnp.int32
+
+        if shape.kind == "train":
+            t = shape.seq_len
+            if cfg.family == "vlm":
+                nf = cfg.n_frontend_tokens
+                return {
+                    "embeds": jax.ShapeDtypeStruct((b, nf, cfg.d_model), dtype),
+                    "tokens": jax.ShapeDtypeStruct((b, t - nf), i32),
+                    "labels": jax.ShapeDtypeStruct((b, t - nf), i32),
+                }
+            if cfg.is_encdec:
+                return {
+                    "frames": jax.ShapeDtypeStruct((b, cfg.n_frontend_tokens, cfg.d_model), dtype),
+                    "tokens": jax.ShapeDtypeStruct((b, t), i32),
+                    "labels": jax.ShapeDtypeStruct((b, t), i32),
+                }
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, t), i32),
+                "labels": jax.ShapeDtypeStruct((b, t), i32),
+            }
+
+        if shape.kind == "prefill":
+            t = shape.seq_len
+            out = {"cache": self.abstract_cache(b, t, dtype)}
+            if cfg.family == "vlm":
+                nf = cfg.n_frontend_tokens
+                out["embeds"] = jax.ShapeDtypeStruct((b, nf, cfg.d_model), dtype)
+                out["tokens"] = jax.ShapeDtypeStruct((b, t - nf), i32)
+            elif cfg.is_encdec:
+                out["frames"] = jax.ShapeDtypeStruct((b, cfg.n_frontend_tokens, cfg.d_model), dtype)
+                out["tokens"] = jax.ShapeDtypeStruct((b, t), i32)
+            else:
+                out["tokens"] = jax.ShapeDtypeStruct((b, t), i32)
+            return out
+
+        # decode: one new token against a cache of shape.seq_len
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "cache": self.abstract_cache(b, shape.seq_len, dtype),
+            "index": jax.ShapeDtypeStruct((), i32),
+        }
+        if cfg.is_encdec:
+            out["enc_out"] = jax.ShapeDtypeStruct((b, cfg.n_frontend_tokens, cfg.d_model), dtype)
+        return out
+
+    def input_partition_specs(self, shape: ShapeSpec, inputs: dict) -> dict:
+        """PartitionSpecs matching input_specs() under the current rules."""
+        cfg = self.cfg
+        out = {}
+        for k, v in inputs.items():
+            if k in ("tokens", "labels", "mask"):
+                out[k] = sharding.spec("batch", "seq") if jax.tree.leaves(v) else None
+            elif k == "embeds":
+                out[k] = sharding.spec("batch", "seq", "act_embed")
+            elif k in ("frames", "enc_out"):
+                out[k] = sharding.spec("batch", "frames", "act_embed")
+            elif k == "index":
+                out[k] = sharding.spec()
+            elif k == "cache":
+                if cfg.is_encdec:
+                    out[k] = {
+                        "k": sharding.spec(*layers.KV_CACHE_AXES),
+                        "v": sharding.spec(*layers.KV_CACHE_AXES),
+                    }
+                else:
+                    out[k] = transformer.cache_partition_specs(cfg, v)
+            else:
+                raise KeyError(k)
+        return out
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

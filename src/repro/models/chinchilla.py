@@ -1,0 +1,83 @@
+"""The paper's own model family (Table 3): Chinchilla-style decoder-only
+transformers with QK-norm, z-loss, vocab 32768, seq 2048, MHA, GeLU MLP.
+
+Also provides the reduced CPU "ladder" used by the scaling-law benchmarks in
+this container (same family, smaller widths).
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+# scale -> (layers, heads, d_model(QKV dim), d_ff(hidden))
+PAPER_TABLE3 = {
+    "35m": (6, 8, 512, 2048),
+    "90m": (9, 12, 768, 3072),
+    "180m": (12, 16, 1024, 4096),
+    "330m": (15, 20, 1280, 5120),
+    "550m": (18, 24, 1536, 6144),
+    "1.3b": (24, 32, 2048, 8192),
+    "2.4b": (30, 40, 2560, 10240),
+    "4b": (36, 48, 3072, 12288),
+    "10b": (48, 64, 4096, 16384),
+}
+
+# paper token budgets (Table 3)
+PAPER_TOKEN_BUDGETS = {
+    "35m": 700e6, "90m": 1.8e9, "180m": 3.6e9, "330m": 6.6e9,
+    "550m": 11e9, "1.3b": 26e9, "2.4b": 48e9, "4b": 80e9, "10b": 200e9,
+}
+
+
+def chinchilla_config(scale: str) -> ModelConfig:
+    layers, heads, d_model, d_ff = PAPER_TABLE3[scale]
+    return ModelConfig(
+        name=f"chinchilla-{scale}",
+        family="dense",
+        n_layers=layers,
+        d_model=d_model,
+        n_heads=heads,
+        n_kv_heads=heads,           # MHA
+        head_dim=d_model // heads,
+        d_ff=d_ff,
+        vocab_size=32_768,          # paper: 32k padded to a power of 2
+        act="gelu",
+        glu=False,                  # NanoDO-style plain GeLU MLP
+        qk_norm=True,               # paper §3 (Wortsman et al.)
+        tie_embeddings=True,
+        max_seq_len=2048,
+        z_loss=1e-4,                # paper §3 (Chowdhery et al.)
+    )
+
+
+def tiny_ladder() -> dict:
+    """CPU-runnable miniature of the same family for the loss-vs-N sweeps.
+
+    Widths follow the paper's aspect-ratio recipe; param counts ~0.25M-4M so
+    Chinchilla budgets (D=20N) complete on one CPU core.
+    """
+    grid = {
+        "t0": (2, 2, 64, 256),
+        "t1": (3, 4, 96, 384),
+        "t2": (4, 4, 128, 512),
+        "t3": (5, 8, 192, 768),
+    }
+    out = {}
+    for name, (layers, heads, d_model, d_ff) in grid.items():
+        out[name] = ModelConfig(
+            name=f"tiny-{name}",
+            family="dense",
+            n_layers=layers,
+            d_model=d_model,
+            n_heads=heads,
+            n_kv_heads=heads,
+            head_dim=d_model // heads,
+            d_ff=d_ff,
+            vocab_size=256,
+            act="gelu",
+            glu=False,
+            qk_norm=True,
+            tie_embeddings=True,
+            max_seq_len=256,
+            remat=False,
+        )
+    return out

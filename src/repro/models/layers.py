@@ -1,0 +1,367 @@
+"""Common neural-net building blocks (pure functions over param dicts).
+
+Parameters are declared as trees of ``PSpec`` (shape + logical sharding axes
++ initializer); the same declaration drives (a) real initialization for
+training, (b) ``ShapeDtypeStruct`` stand-ins for the dry-run, and (c)
+``PartitionSpec`` generation.  This is the single source of truth that keeps
+the 40-cell dry-run and the smoke tests in lock-step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Parameter declaration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones
+    std: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def dense_spec(fan_in: int, *shape_axes) -> PSpec:
+    """PSpec with 1/sqrt(fan_in) init (NanoDO / Chinchilla convention)."""
+    shape = tuple(s for s, _ in shape_axes)
+    axes = tuple(a for _, a in shape_axes)
+    return PSpec(shape, axes, init="normal", std=float(fan_in) ** -0.5)
+
+
+def init_params(key: jax.Array, tree, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_pspec)
+    keys = jax.random.split(key, max(1, len(leaves)))
+
+    def mk(k, s: PSpec):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dtype)
+        return (jax.random.truncated_normal(k, -3.0, 3.0, s.shape, jnp.float32) * s.std).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [mk(k, s) for k, s in zip(keys, leaves)])
+
+
+def abstract_params(tree, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for dry-run lowering (no device allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), tree, is_leaf=_is_pspec
+    )
+
+
+def param_partition_specs(tree, extra_leading: Tuple[Optional[str], ...] = ()):
+    """PartitionSpec tree under the current sharding rules.
+
+    ``extra_leading`` prepends logical axes (e.g. ("replica",) for the DiLoCo
+    replica axis, or ("layers",) inside a scanned stack — callers compose).
+    """
+    return jax.tree.map(
+        lambda s: sharding.spec(*extra_leading, *s.axes), tree, is_leaf=_is_pspec
+    )
+
+
+def stack_specs(tree, n: int):
+    """Prepend a stacked-layers axis of size n to every PSpec in the tree."""
+    return jax.tree.map(
+        lambda s: PSpec((n, *s.shape), ("layers", *s.axes), s.init, s.std),
+        tree,
+        is_leaf=_is_pspec,
+    )
+
+
+def count_params(tree) -> int:
+    return sum(
+        int(np.prod(l.shape))
+        for l in jax.tree.leaves(tree, is_leaf=_is_pspec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int) -> PSpec:
+    return PSpec((d,), (None,), init="ones")
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply RoPE.  x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA/MQA + optional QK-norm + KV cache)
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg: ModelConfig) -> dict:
+    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_spec(d, (d, "embed"), (nh, "heads"), (hd, "head_dim")),
+        "wk": dense_spec(d, (d, "embed"), (nkv, "kv_heads"), (hd, "head_dim")),
+        "wv": dense_spec(d, (d, "embed"), (nkv, "kv_heads"), (hd, "head_dim")),
+        "wo": dense_spec(nh * hd, (nh, "heads"), (hd, "head_dim"), (d, "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_spec(hd)
+        p["k_norm"] = rmsnorm_spec(hd)
+    return p
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int, dtype):
+    nkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((n_layers, batch, max_len, nkv, hd), dtype),
+        "v": jnp.zeros((n_layers, batch, max_len, nkv, hd), dtype),
+    }
+
+
+def kv_cache_specs(cfg: ModelConfig, batch: int, max_len: int, n_layers: int, dtype):
+    nkv, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (n_layers, batch, max_len, nkv, hd)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+    }
+
+
+KV_CACHE_AXES = ("layers", "batch", "kv_seq", "kv_heads", None)
+
+
+def attention(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    kv: Optional[Tuple[jax.Array, jax.Array]] = None,   # cross-attn K/V source
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (k_cache, v_cache)
+    cache_index: Optional[jax.Array] = None,
+):
+    """Multi-head GQA attention.
+
+    Returns (out, (new_k_cache, new_v_cache) or None).
+    In decode mode (cache given, x is the new token(s)) keys/values are
+    written at ``cache_index`` and attention runs over the whole cache.
+    """
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,dnh->btnh", x, params["wq"])
+    if kv is None:
+        k = jnp.einsum("btd,dnh->btnh", x, params["wk"])
+        v = jnp.einsum("btd,dnh->btnh", x, params["wv"])
+    else:
+        k = jnp.einsum("btd,dnh->btnh", kv[0], params["wk"])
+        v = jnp.einsum("btd,dnh->btnh", kv[1], params["wv"])
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+
+    if kv is None:  # self-attention gets RoPE
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    q = sharding.shard(q, "batch", "seq", "heads", None)
+    new_cache = None
+    if cache is not None:
+        k_cache, v_cache = cache
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, cache_index, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, cache_index, 0, 0))
+        k_cache = sharding.shard(k_cache, "batch", "kv_seq", "kv_heads", None)
+        v_cache = sharding.shard(v_cache, "batch", "kv_seq", "kv_heads", None)
+        new_cache = (k_cache, v_cache)
+        k, v = k_cache, v_cache
+        is_causal = True  # valid = causal against absolute positions
+    else:
+        k = sharding.shard(k, "batch", "kv_seq", "kv_heads", None)
+        v = sharding.shard(v, "batch", "kv_seq", "kv_heads", None)
+        is_causal = causal and kv is None
+
+    group = nh // nkv
+    b, tq = q.shape[0], q.shape[1]
+    qg = q.reshape(b, tq, nkv, group, hd)
+    out = _attn_core(qg, k, v, positions, is_causal)
+    out = out.reshape(b, tq, nh, hd)
+    out = sharding.shard(out, "batch", "seq", "heads", None)
+    out = jnp.einsum("btnh,nhd->btd", out, params["wo"])
+    return sharding.shard(out, "batch", "seq", "act_embed"), new_cache
+
+
+ATTN_Q_CHUNK = 1024
+
+# On TPU, route attention through the Pallas flash kernel
+# (repro.kernels.flash_attention). CPU default: chunked jnp (the oracle).
+USE_FLASH_KERNEL = False
+
+
+def _flash_ok(qg, k, q_positions, is_causal):
+    b, tq, nkv, g, hd = qg.shape
+    s = k.shape[1]
+    return (
+        is_causal and tq == s and tq % 128 == 0 and hd in (32, 64, 128, 256)
+    )
+
+
+def _attn_core(qg, k, v, q_positions, is_causal, chunk: int = ATTN_Q_CHUNK):
+    """Softmax attention, chunked over query blocks (flash-style schedule).
+
+    qg: (b, tq, nkv, g, hd);  k/v: (b, s, nkv, hd);  q_positions: (b, tq).
+    Never materializes more than a (b, nkv, g, chunk, s) logits block — keeps
+    32k-token prefill HLO temp memory bounded.  Each block is rematted so the
+    backward pass recomputes softmax probabilities instead of storing them
+    (flash-attention-backward pattern).  The Pallas kernel
+    (repro.kernels.flash_attention) replaces this on TPU.
+    Chunks are unrolled (python loop): trip counts stay visible to
+    ``cost_analysis`` and XLA can pipeline blocks freely.
+    """
+    b, tq, nkv, g, hd = qg.shape
+    s = k.shape[1]
+    cdt = qg.dtype
+    scale = hd ** -0.5
+    kv_pos = jnp.arange(s)
+
+    if USE_FLASH_KERNEL and _flash_ok(qg, k, q_positions, is_causal):
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        qf = qg.transpose(0, 2, 3, 1, 4).reshape(b * nkv * g, tq, hd)
+        kf = k.transpose(0, 2, 1, 3).reshape(b * nkv, s, hd)
+        vf = v.transpose(0, 2, 1, 3).reshape(b * nkv, s, hd)
+        of = flash_attention(qf, kf, vf, True)
+        return of.reshape(b, nkv, g, tq, hd).transpose(0, 3, 1, 2, 4)
+
+    @jax.checkpoint
+    def block(qb, posb, k, v):
+        # qb: (b, tb, nkv, g, hd); posb: (b, tb)
+        logits = jnp.einsum("btngh,bsnh->bngts", qb, k).astype(jnp.float32) * scale
+        if is_causal:
+            mask = kv_pos[None, :] <= posb[..., None]          # (b, tb, s)
+            logits = jnp.where(mask[:, None, None, :, :], logits, jnp.finfo(jnp.float32).min)
+        probs = jax.nn.softmax(logits, axis=-1).astype(cdt)
+        return jnp.einsum("bngts,bsnh->btngh", probs, v)
+
+    if tq <= chunk:
+        return block(qg, q_positions, k, v)
+
+    outs = []
+    for i in range(0, tq, chunk):
+        outs.append(block(qg[:, i : i + chunk], q_positions[:, i : i + chunk], k, v))
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / plain)
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    p = {"w_out": dense_spec(f, (f, "ff"), (d, "embed"))}
+    if cfg.glu:
+        p["w_in"] = dense_spec(d, (d, "embed"), (f, "ff"))
+        p["w_gate"] = dense_spec(d, (d, "embed"), (f, "ff"))
+    else:
+        p["w_in"] = dense_spec(d, (d, "embed"), (f, "ff"))
+    return p
+
+
+def _act(x: jax.Array, act: str) -> jax.Array:
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    if act == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(act)
+
+
+def mlp(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = jnp.einsum("btd,df->btf", x, params["w_in"])
+    if cfg.glu:
+        g = jnp.einsum("btd,df->btf", x, params["w_gate"])
+        h = _act(g, cfg.act) * h
+    else:
+        h = _act(h, cfg.act)
+    h = sharding.shard(h, "batch", "seq", "ff")
+    out = jnp.einsum("btf,fd->btd", h, params["w_out"])
+    return sharding.shard(out, "batch", "seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding / losses
+# ---------------------------------------------------------------------------
+
+
+def embedding_spec(cfg: ModelConfig) -> PSpec:
+    # std 1/sqrt(d): with the sqrt(d) input scaling this gives unit-scale
+    # activations AND unit-scale tied logits at init.
+    return PSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), std=cfg.d_model ** -0.5)
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    out = jnp.take(table, tokens, axis=0)
+    return sharding.shard(out, "batch", "seq", "act_embed")
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    logits = jnp.einsum("btd,vd->btv", x, table)
+    return sharding.shard(logits, "batch", "seq", "vocab")
+
+
+def xent_loss(
+    logits: jax.Array,
+    labels: jax.Array,
+    mask: Optional[jax.Array] = None,
+    z_coef: float = 1e-4,
+):
+    """Cross-entropy with z-loss regularization (paper §3, PaLM-style)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    correct = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - correct
+    z = z_coef * jnp.square(lse)
+    per_tok = nll + z
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (per_tok * mask).sum() / denom, (nll * mask).sum() / denom

@@ -1,0 +1,221 @@
+"""Mamba-2 (SSD — state-space duality) mixer block.
+
+Chunked dual form (arXiv:2405.21060): within chunks of length Q the SSM is
+computed as masked attention-like matmuls (MXU-friendly); across chunks a
+cheap recurrence carries the (heads, head_dim, d_state) state.  A Pallas
+kernel for the intra-chunk part lives in ``repro.kernels.ssd_scan``; this
+module is the pure-jnp implementation used as reference and CPU/dry-run path.
+
+Decode uses the classic recurrent update with a conv-state + ssm-state cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+def ssm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, n = cfg.ssm_n_groups, cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_dim = di + 2 * g * n
+    d_in_proj = 2 * di + 2 * g * n + h
+    return {
+        "in_proj": layers.dense_spec(d, (d, "embed"), (d_in_proj, "ssm_heads")),
+        "conv_w": layers.PSpec((conv_dim, cfg.ssm_conv), ("ssm_heads", None), std=cfg.ssm_conv ** -0.5),
+        "conv_b": layers.PSpec((conv_dim,), ("ssm_heads",), init="zeros"),
+        "A_log": layers.PSpec((h,), ("ssm_heads",), init="ones"),
+        "D": layers.PSpec((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": layers.PSpec((h,), ("ssm_heads",), init="zeros"),
+        "norm": layers.PSpec((di,), ("ssm_heads",), init="ones"),
+        "out_proj": layers.dense_spec(di, (di, "ssm_heads"), (d, "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, g, n, h = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_heads
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. xbc: (b, l, c); w: (c, k)."""
+    k = w.shape[-1]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    # unrolled k-tap FIR (k=4): cheap + fusion-friendly
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[:, i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(
+    x: jax.Array,      # (b, l, h, p)
+    dt: jax.Array,     # (b, l, h)      softplus'd
+    A: jax.Array,      # (h,)           negative
+    B: jax.Array,      # (b, l, g, n)
+    C: jax.Array,      # (b, l, g, n)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,   # (b, h, p, n)
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y (b,l,h,p), final_state (b,h,p,n))."""
+    bsz, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    rep = h // g
+    cdt = x.dtype
+
+    # scan over chunks: carries the (b,h,p,n) state; per-chunk work is the
+    # quadratic "dual form" on the MXU.  Keeps live memory to one chunk.
+    xc = jnp.moveaxis(x.reshape(bsz, nc, chunk, h, p), 1, 0)           # (nc,b,q,h,p)
+    dtc = jnp.moveaxis(dt.reshape(bsz, nc, chunk, h), 1, 0).astype(jnp.float32)
+    Bh = jnp.moveaxis(jnp.repeat(B.reshape(bsz, nc, chunk, g, n), rep, axis=3), 1, 0)
+    Ch = jnp.moveaxis(jnp.repeat(C.reshape(bsz, nc, chunk, g, n), rep, axis=3), 1, 0)
+
+    iq = jnp.arange(chunk)
+    causal = (iq[:, None] >= iq[None, :])[None, :, :, None]            # (1,i,j,1)
+    s0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+    Af = A.astype(jnp.float32)
+
+    @jax.checkpoint
+    def step(state, inp):
+        xq, dtq, Bq, Cq = inp                     # (b,q,h,p) (b,q,h) (b,q,h,n) x2
+        dA = dtq * Af                             # (b,q,h) <= 0
+        cum = jnp.cumsum(dA, axis=1)
+        total = cum[:, -1, :]                     # (b,h)
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j), i >= j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]          # (b,i,j,h)
+        L = jnp.where(causal, jnp.exp(diff), 0.0)
+        cb = jnp.einsum("bihn,bjhn->bijh", Cq.astype(jnp.float32), Bq.astype(jnp.float32))
+        w = (cb * L * dtq[:, None, :, :]).astype(cdt)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xq)
+        # inter-chunk: contribution of the carried state
+        wC = (Cq.astype(jnp.float32) * jnp.exp(cum)[..., None]).astype(cdt)
+        y_inter = jnp.einsum("bqhn,bhpn->bqhp", wC, state.astype(cdt))
+        # state update
+        decay_to_end = jnp.exp(total[:, None, :] - cum)          # (b,q,h)
+        wB = (Bq.astype(jnp.float32) * (dtq * decay_to_end)[..., None]).astype(cdt)
+        S_new = jnp.einsum("bqhn,bqhp->bhpn", wB, xq).astype(jnp.float32)
+        state = state * jnp.exp(total)[:, :, None, None] + S_new
+        return state, y_intra + y_inter
+
+    if unroll:
+        # dry-run mode: unrolled chunks keep trip counts visible to
+        # cost_analysis (lax.scan bodies are costed once)
+        state, ys = s0, []
+        for i in range(nc):
+            state, yi = step(state, (xc[i], dtc[i], Bh[i], Ch[i]))
+            ys.append(yi)
+        final_state, ys = state, jnp.stack(ys)
+    else:
+        final_state, ys = jax.lax.scan(step, s0, (xc, dtc, Bh, Ch))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, l, h, p)
+    return y, final_state.astype(cdt)
+
+
+def ssm_block(
+    params: dict,
+    xin: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[dict] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Full Mamba-2 mixer. Train/prefill path (cache=None) or one-step decode.
+
+    cache: {"conv": (b, k-1, conv_dim), "state": (b, h, p, n)}
+    """
+    di, g, n, h = cfg.d_inner, cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("btd,dk->btk", xin, params["in_proj"])
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    new_cache = None
+    if cache is None or xin.shape[1] > 1:
+        # train / prefill: chunked SSD over the whole sequence
+        xbc_raw = xbc
+        xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        xs, B, C = jnp.split(xbc, [di, di + g * n], axis=-1)
+        xh = xs.reshape(*xs.shape[:2], h, p)
+        xh = sharding.shard(xh, "batch", "seq", "ssm_heads", None)
+        Bh = B.reshape(*B.shape[:2], g, n)
+        Ch = C.reshape(*C.shape[:2], g, n)
+        seq = xin.shape[1]
+        chunk = min(cfg.ssm_chunk, seq)
+        pad = (-seq) % chunk
+        if pad:
+            # dt padded with 0 => padded steps neither decay nor write state
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        else:
+            dtp = dt
+        y, final_state = ssd_chunked(xh, dtp, A, Bh, Ch, chunk, unroll=cfg.unroll_ssm)
+        if pad:
+            y = y[:, :seq]
+            xh = xh[:, :seq]
+        if cache is not None:  # prefill: emit decode cache
+            k = cfg.ssm_conv
+            new_cache = {
+                "conv": xbc_raw[:, -(k - 1):, :].astype(cache["conv"].dtype),
+                "state": final_state.astype(cache["state"].dtype),
+            }
+    else:
+        # single-token recurrent decode: xin is (b, 1, d)
+        conv_cache = cache["conv"]                          # (b, k-1, conv_dim)
+        window = jnp.concatenate([conv_cache, xbc], axis=1)  # (b, k, conv_dim)
+        conv_out = jnp.einsum("bkc,ck->bc", window, params["conv_w"]) + params["conv_b"]
+        xbc1 = jax.nn.silu(conv_out)[:, None, :]
+        xs, B, C = jnp.split(xbc1, [di, di + g * n], axis=-1)
+        xh = xs.reshape(xs.shape[0], h, p)                   # (b,h,p)
+        Bh = jnp.repeat(B.reshape(B.shape[0], g, n), h // g, axis=1)   # (b,h,n)
+        Ch = jnp.repeat(C.reshape(C.shape[0], g, n), h // g, axis=1)
+        dt1 = dt[:, 0]                                       # (b,h)
+        state = cache["state"].astype(jnp.float32)           # (b,h,p,n)
+        dA = jnp.exp(dt1 * A)                                # (b,h)
+        upd = dt1[..., None, None] * xh.astype(jnp.float32)[..., None] * Bh.astype(jnp.float32)[:, :, None, :]
+        state = state * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ch.astype(jnp.float32))[:, None].astype(xin.dtype)
+        new_cache = {"conv": window[:, 1:], "state": state.astype(cache["state"].dtype)}
+        xh = xh[:, None]                                     # (b,1,h,p)
+
+    y = y + params["D"].astype(y.dtype)[:, None] * xh.reshape(y.shape[0], -1, h, p)
+    y = y.reshape(*y.shape[:2], di)
+    y = layers.rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bti,id->btd", y, params["out_proj"])
+    return sharding.shard(out, "batch", "seq", "act_embed"), new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, n_layers: int, dtype):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+    }
+
+
+def ssm_cache_specs(cfg: ModelConfig, batch: int, n_layers: int, dtype):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_state
+    return {
+        "conv": jax.ShapeDtypeStruct((n_layers, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jax.ShapeDtypeStruct((n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+    }
+
+
+SSM_CACHE_AXES = {
+    "conv": ("layers", "batch", None, "ssm_heads"),
+    "state": ("layers", "batch", "ssm_heads", None, None),
+}

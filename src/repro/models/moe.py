@@ -1,0 +1,111 @@
+"""Mixture-of-Experts FFN: token-choice top-k router + capacity dispatch.
+
+Einsum (dispatch/combine) formulation a la Mesh-TF / t5x: tokens are split
+into groups, each group dispatches at most ``capacity`` tokens per expert.
+Under EP sharding ("experts" -> model axis, "groups" -> data axis) GSPMD
+lowers the dispatch einsums to all-to-all-style collectives.  Shared experts
+(DeepSeek-MoE) are a fused always-on MLP.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    p = {
+        "router": layers.PSpec((d, e), ("embed", "experts"), std=d ** -0.5),
+        "w_in": layers.PSpec((e, d, f), ("experts", "embed", "expert_ff"), std=d ** -0.5),
+        "w_out": layers.PSpec((e, f, d), ("experts", "expert_ff", "embed"), std=f ** -0.5),
+    }
+    if cfg.glu:
+        p["w_gate"] = layers.PSpec((e, d, f), ("experts", "embed", "expert_ff"), std=d ** -0.5)
+    if cfg.n_shared_experts:
+        p["shared"] = layers.mlp_specs(cfg, d_ff=cfg.n_shared_experts * cfg.moe_d_ff)
+    return p
+
+
+def _capacity(cfg: ModelConfig, group_size: int) -> int:
+    cap = int(group_size * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(cap, 1)
+
+
+def moe(params: dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    """Apply the MoE FFN.  x: (b, t, d).  Returns (y, aux-metrics)."""
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    s = min(cfg.moe_group_size, b * t)
+    tokens = b * t
+    assert tokens % s == 0, f"tokens {tokens} not divisible by group size {s}"
+    g = tokens // s
+    xg = x.reshape(g, s, d)
+    xg = sharding.shard(xg, "groups", None, "act_embed")
+
+    # ---- router (fp32 for stability) ------------------------------------
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)             # (g, s, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- capacity-based dispatch ----------------------------------------
+    cap = _capacity(cfg, s)
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)   # (g, s, k, e)
+    # priority: token-major, then expert-choice slot
+    flat = onehot.reshape(g, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) * flat - flat          # 0-based slot per expert
+    keep = (pos < cap).astype(jnp.float32) * flat
+    disp = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32) * keep[..., None]
+    disp = disp.reshape(g, s, k, e, cap)
+    combine = (disp * gate_vals[..., None, None]).sum(axis=2)   # (g, s, e, cap)
+    dispatch = disp.sum(axis=2)                                  # (g, s, e, cap)
+
+    cdt = x.dtype
+    dispatch = dispatch.astype(cdt)
+    combine = combine.astype(cdt)
+
+    # ---- expert computation ----------------------------------------------
+    # "expert_cap" sharding (perf iteration, EXPERIMENTS.md Pair B): when the
+    # expert count cannot shard over the model axis, sharding the CAPACITY
+    # dim keeps expert matmuls local and defers the model-axis all-reduce to
+    # the combined (g,s,d) output — e*cap/tokens (~top_k*1.25x) fewer bytes
+    # than all-reducing the per-slot partials.
+    ein = jnp.einsum("gsec,gsd->gecd", dispatch, xg)
+    ein = sharding.shard(ein, "groups", "experts", "expert_cap", "act_embed")
+    h = jnp.einsum("gecd,edf->gecf", ein, params["w_in"])
+    if cfg.glu:
+        gt = jnp.einsum("gecd,edf->gecf", ein, params["w_gate"])
+        h = layers._act(gt, cfg.act) * h
+    else:
+        h = layers._act(h, cfg.act)
+    h = sharding.shard(h, "groups", "experts", "expert_cap", "expert_ff")
+    eout = jnp.einsum("gecf,efd->gecd", h, params["w_out"])
+    eout = sharding.shard(eout, "groups", "experts", "expert_cap", "act_embed")
+    y = jnp.einsum("gecd,gsec->gsd", eout, combine)
+    y = sharding.shard(y, "groups", None, "act_embed")
+    y = y.reshape(b, t, d)
+
+    # ---- aux losses --------------------------------------------------------
+    # load-balance (Switch): e * sum_e fraction_dispatched_e * mean_prob_e
+    frac = dispatch.astype(jnp.float32).sum((1, 3)) / (s * k)    # (g, e)
+    mean_prob = probs.mean(axis=1)                               # (g, e)
+    aux = (e * (frac * mean_prob).sum(-1)).mean()
+    router_z = jnp.square(jax.scipy.special.logsumexp(logits, axis=-1)).mean()
+    overflow = 1.0 - keep.sum() / jnp.maximum(flat.sum(), 1.0)
+
+    # ---- shared experts (always-on) ---------------------------------------
+    if cfg.n_shared_experts:
+        y = y + layers.mlp(params["shared"], x, cfg)
+
+    metrics = {
+        "moe_aux": aux * cfg.aux_loss_coef,
+        "moe_router_z": router_z * cfg.router_z_coef,
+        "moe_overflow": overflow,
+    }
+    return y, metrics

@@ -1,0 +1,378 @@
+"""Unified decoder-only LM covering dense / MoE / SSM / hybrid families.
+
+Layers are scanned in *groups* (``cfg.layer_group`` layers per scan step) so
+the HLO is depth-independent; heterogeneous stacks (Jamba's 1-attn:7-mamba
+period with alternating MoE) set ``layer_group`` to the period.  Leading
+``first_dense`` layers (DeepSeek-MoE) are hoisted out of the scan.
+
+All functions are pure; parameters are dicts declared via PSpec trees
+(see models/layers.py) so the same declaration produces real params,
+ShapeDtypeStructs (dry-run) and PartitionSpecs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro import sharding
+from repro.configs.base import ModelConfig
+from repro.models import layers, mamba2, moe as moe_lib
+
+# ---------------------------------------------------------------------------
+# Param declaration
+# ---------------------------------------------------------------------------
+
+
+def _block_specs(cfg: ModelConfig, layer_idx: int) -> dict:
+    kind = cfg.layer_kind(layer_idx)
+    mk = cfg.mlp_kind(layer_idx)
+    p = {
+        "norm1": layers.rmsnorm_spec(cfg.d_model),
+        "mixer": layers.attention_specs(cfg) if kind == "attn" else mamba2.ssm_specs(cfg),
+    }
+    if mk == "moe":
+        p["norm2"] = layers.rmsnorm_spec(cfg.d_model)
+        p["mlp"] = moe_lib.moe_specs(cfg)
+    elif (cfg.dense_d_ff or cfg.d_ff) > 0:
+        p["norm2"] = layers.rmsnorm_spec(cfg.d_model)
+        p["mlp"] = layers.mlp_specs(cfg, d_ff=(cfg.dense_d_ff or cfg.d_ff))
+    # d_ff == 0 (mamba2): mixer-only block, no FFN
+    return p
+
+
+def _plan(cfg: ModelConfig):
+    """(prefix_layer_indices, n_scan_groups, group_layer_indices)."""
+    prefix = list(range(cfg.first_dense))
+    rest = cfg.n_layers - cfg.first_dense
+    g = cfg.layer_group if cfg.scan_layers else rest
+    assert rest % g == 0, (cfg.n_layers, cfg.first_dense, g)
+    n_groups = rest // g
+    group_idx = [cfg.first_dense + j for j in range(g)]
+    # periodicity check: every group must share the prototype structure
+    for gi in range(n_groups):
+        for j in range(g):
+            i = cfg.first_dense + gi * g + j
+            proto = cfg.first_dense + j
+            assert cfg.layer_kind(i) == cfg.layer_kind(proto), (i, proto)
+            assert cfg.mlp_kind(i) == cfg.mlp_kind(proto), (i, proto)
+    return prefix, n_groups, group_idx
+
+
+def decoder_specs(cfg: ModelConfig) -> dict:
+    prefix, n_groups, group_idx = _plan(cfg)
+    specs = {
+        "embed": layers.embedding_spec(cfg),
+        "final_norm": layers.rmsnorm_spec(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = layers.PSpec(
+            (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), std=cfg.d_model ** -0.5
+        )
+    for i in prefix:
+        specs[f"prefix_{i}"] = _block_specs(cfg, i)
+    group = {f"sub{j}": _block_specs(cfg, i) for j, i in enumerate(group_idx)}
+    specs["stack"] = layers.stack_specs(group, n_groups)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Caches (KV for attention layers, conv+state for SSM layers)
+# ---------------------------------------------------------------------------
+
+
+def _cache_plan(cfg: ModelConfig):
+    prefix, n_groups, group_idx = _plan(cfg)
+    pre_attn = [i for i in prefix if cfg.layer_kind(i) == "attn"]
+    pre_ssm = [i for i in prefix if cfg.layer_kind(i) == "ssm"]
+    grp_attn = [j for j, i in enumerate(group_idx) if cfg.layer_kind(i) == "attn"]
+    grp_ssm = [j for j, i in enumerate(group_idx) if cfg.layer_kind(i) == "ssm"]
+    return pre_attn, pre_ssm, grp_attn, grp_ssm, n_groups
+
+
+def _cache_struct(cfg: ModelConfig, batch: int, max_len: int, dtype, abstract: bool):
+    pre_attn, pre_ssm, grp_attn, grp_ssm, n_groups = _cache_plan(cfg)
+    mk_kv = layers.kv_cache_specs if abstract else layers.init_kv_cache
+    mk_ssm = mamba2.ssm_cache_specs if abstract else mamba2.init_ssm_cache
+    cache: dict = {}
+    if pre_attn:
+        cache["prefix_kv"] = mk_kv(cfg, batch, max_len, len(pre_attn), dtype)
+    if pre_ssm:
+        cache["prefix_ssm"] = mk_ssm(cfg, batch, len(pre_ssm), dtype)
+    if grp_attn:
+        kv = mk_kv(cfg, batch, max_len, n_groups * len(grp_attn), dtype)
+        cache["scan_kv"] = jax.tree.map(
+            lambda a: (
+                jax.ShapeDtypeStruct((n_groups, len(grp_attn), *a.shape[1:]), a.dtype)
+                if abstract
+                else a.reshape(n_groups, len(grp_attn), *a.shape[1:])
+            ),
+            kv,
+        )
+    if grp_ssm:
+        ssm = mk_ssm(cfg, batch, n_groups * len(grp_ssm), dtype)
+        cache["scan_ssm"] = jax.tree.map(
+            lambda a: (
+                jax.ShapeDtypeStruct((n_groups, len(grp_ssm), *a.shape[1:]), a.dtype)
+                if abstract
+                else a.reshape(n_groups, len(grp_ssm), *a.shape[1:])
+            ),
+            ssm,
+        )
+    return cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    return _cache_struct(cfg, batch, max_len, dtype, abstract=False)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return _cache_struct(cfg, batch, max_len, dtype, abstract=True)
+
+
+def cache_partition_specs(cfg: ModelConfig, cache) -> dict:
+    """PartitionSpecs matching the cache pytree under current rules."""
+
+    def kv_spec(extra):
+        return {
+            "k": sharding.spec(*extra, *layers.KV_CACHE_AXES),
+            "v": sharding.spec(*extra, *layers.KV_CACHE_AXES),
+        }
+
+    def ssm_spec(extra):
+        return {
+            k: sharding.spec(*extra, *mamba2.SSM_CACHE_AXES[k]) for k in ("conv", "state")
+        }
+
+    out = {}
+    if "prefix_kv" in cache:
+        out["prefix_kv"] = kv_spec(())
+    if "prefix_ssm" in cache:
+        out["prefix_ssm"] = ssm_spec(())
+    if "scan_kv" in cache:
+        out["scan_kv"] = kv_spec((None,))
+    if "scan_ssm" in cache:
+        out["scan_ssm"] = ssm_spec((None,))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    layer_idx: int,
+    positions: jax.Array,
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]],
+    ssm_cache: Optional[dict],
+    cache_index,
+    remat: bool = False,
+):
+    if remat:
+        if cfg.remat_policy == "save_comm":
+            # keep the post-all-reduce block outputs: the backward pass then
+            # skips re-running the 2 forward TP all-reduces per layer
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "mixer_out", "mlp_out"
+            )
+        else:
+            policy = jax.checkpoint_policies.nothing_saveable
+        fn = jax.checkpoint(
+            lambda p, y: _apply_block(
+                p, y, cfg, layer_idx, positions, kv_cache, ssm_cache, cache_index
+            ),
+            policy=policy,
+        )
+        return fn(params, x)
+    kind = cfg.layer_kind(layer_idx)
+    mk = cfg.mlp_kind(layer_idx)
+    h = layers.rmsnorm(x, params["norm1"], cfg.norm_eps)
+    new_kv = new_ssm = None
+    if kind == "attn":
+        out, new_kv = layers.attention(
+            params["mixer"], h, cfg, positions=positions,
+            cache=kv_cache, cache_index=cache_index,
+        )
+    else:
+        out, new_ssm = mamba2.ssm_block(params["mixer"], h, cfg, cache=ssm_cache)
+    out = checkpoint_name(out, "mixer_out")
+    x = x + out
+    metrics = {}
+    if "mlp" in params:
+        h = layers.rmsnorm(x, params["norm2"], cfg.norm_eps)
+        if mk == "moe":
+            out, metrics = moe_lib.moe(params["mlp"], h, cfg)
+        else:
+            out = layers.mlp(params["mlp"], h, cfg)
+        out = checkpoint_name(out, "mlp_out")
+        x = x + out
+    return x, new_kv, new_ssm, metrics
+
+
+def forward(
+    params: dict,
+    tokens: Optional[jax.Array],
+    cfg: ModelConfig,
+    *,
+    embeds: Optional[jax.Array] = None,   # (b, n_front, d) modality-stub embeddings
+    cache: Optional[dict] = None,
+    cache_index=0,
+    positions: Optional[jax.Array] = None,
+    mode: str = "train",                  # train | prefill | decode
+):
+    """Returns (logits, new_cache, metrics)."""
+    prefix, n_groups, group_idx = _plan(cfg)
+    pre_attn, pre_ssm, grp_attn, grp_ssm, _ = _cache_plan(cfg)
+
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(params["embed"].dtype))
+    if tokens is not None:
+        parts.append(layers.embed(tokens, params["embed"]))
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = sharding.shard(x, "batch", "seq", "act_embed")
+    b, t = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t)[None, :], (b, t))
+
+    new_cache: dict = {}
+    metrics_acc = []
+
+    # ---- prefix (unscanned) blocks -------------------------------------
+    for slot, i in enumerate(prefix):
+        kv = None
+        if cache is not None and i in pre_attn:
+            j = pre_attn.index(i)
+            kv = (cache["prefix_kv"]["k"][j], cache["prefix_kv"]["v"][j])
+        ssm = None
+        if cache is not None and i in pre_ssm:
+            j = pre_ssm.index(i)
+            ssm = {k: cache["prefix_ssm"][k][j] for k in ("conv", "state")}
+        x, nkv, nssm, m = _apply_block(
+            params[f"prefix_{i}"], x, cfg, i, positions, kv, ssm, cache_index,
+            remat=cfg.remat and mode == "train",
+        )
+        if nkv is not None:
+            acc = new_cache.setdefault("prefix_kv", {"k": [], "v": []})
+            acc["k"].append(nkv[0])
+            acc["v"].append(nkv[1])
+        if nssm is not None:
+            acc = new_cache.setdefault("prefix_ssm", {"conv": [], "state": []})
+            for k in ("conv", "state"):
+                acc[k].append(nssm[k])
+        if m:
+            metrics_acc.append(m)
+
+    for key in ("prefix_kv", "prefix_ssm"):
+        if key in new_cache:
+            new_cache[key] = {k: jnp.stack(v) for k, v in new_cache[key].items()}
+
+    # ---- scanned stack ----------------------------------------------------
+    def group_body(x, xs):
+        gp, gkv, gssm = xs
+        out_kv = {"k": [], "v": []}
+        out_ssm = {"conv": [], "state": []}
+        gmetrics = []
+        xg = x
+        for j, i in enumerate(group_idx):
+            kv = None
+            if gkv is not None and j in grp_attn:
+                a = grp_attn.index(j)
+                kv = (gkv["k"][a], gkv["v"][a])
+            ssm = None
+            if gssm is not None and j in grp_ssm:
+                a = grp_ssm.index(j)
+                ssm = {k: gssm[k][a] for k in ("conv", "state")}
+            xg, nkv, nssm, m = _apply_block(
+                gp[f"sub{j}"], xg, cfg, i, positions, kv, ssm, cache_index,
+                remat=cfg.remat and mode == "train",
+            )
+            if nkv is not None:
+                out_kv["k"].append(nkv[0])
+                out_kv["v"].append(nkv[1])
+            if nssm is not None:
+                for k in ("conv", "state"):
+                    out_ssm[k].append(nssm[k])
+            if m:
+                gmetrics.append(m)
+        ys = {}
+        if out_kv["k"]:
+            ys["kv"] = {k: jnp.stack(v) for k, v in out_kv.items()}
+        if out_ssm["conv"]:
+            ys["ssm"] = {k: jnp.stack(v) for k, v in out_ssm.items()}
+        if gmetrics:
+            ys["metrics"] = {
+                k: jnp.mean(jnp.stack([mm[k] for mm in gmetrics])) for k in gmetrics[0]
+            }
+        return xg, ys
+
+    body = group_body  # remat is applied per-block inside _apply_block
+
+    xs = (
+        params["stack"],
+        cache.get("scan_kv") if cache is not None else None,
+        cache.get("scan_ssm") if cache is not None else None,
+    )
+    x, ys = jax.lax.scan(body, x, xs)
+    if "kv" in ys:
+        new_cache["scan_kv"] = ys["kv"]
+    if "ssm" in ys:
+        new_cache["scan_ssm"] = ys["ssm"]
+    if "metrics" in ys:
+        metrics_acc.append({k: jnp.mean(v) for k, v in ys["metrics"].items()})
+
+    # ---- head ------------------------------------------------------------
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = layers.unembed(x, table)
+
+    metrics = {}
+    for m in metrics_acc:
+        for k, v in m.items():
+            metrics[k] = metrics.get(k, 0.0) + v / len(metrics_acc)
+    return logits, (new_cache if cache is not None else None), metrics
+
+
+# ---------------------------------------------------------------------------
+# Loss / serve entry points
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig):
+    """batch: tokens (b,t) int32, labels (b,t), optional mask, optional embeds."""
+    embeds = batch.get("embeds")
+    logits, _, metrics = forward(params, batch["tokens"], cfg, embeds=embeds, mode="train")
+    labels = batch["labels"]
+    if embeds is not None:
+        # loss only on the text positions (modality embeds carry no labels)
+        logits = logits[:, embeds.shape[1]:, :]
+    loss, nll = layers.xent_loss(logits, labels, batch.get("mask"), cfg.z_loss)
+    for k, v in metrics.items():
+        if k.startswith("moe_") and not k.endswith("overflow"):
+            loss = loss + v
+    metrics["nll"] = nll
+    return loss, metrics
+
+
+def prefill(params: dict, tokens, cfg: ModelConfig, cache, *, embeds=None):
+    logits, new_cache, _ = forward(
+        params, tokens, cfg, embeds=embeds, cache=cache, cache_index=0, mode="prefill"
+    )
+    return logits[:, -1:, :], new_cache
+
+
+def decode_step(params: dict, tokens, cfg: ModelConfig, cache, index):
+    """tokens: (b, 1) current token; index: scalar — tokens already in cache."""
+    b = tokens.shape[0]
+    positions = jnp.broadcast_to(index[None, None], (b, 1)) if jnp.ndim(index) == 0 else index
+    logits, new_cache, _ = forward(
+        params, tokens, cfg, cache=cache, cache_index=index, positions=positions, mode="decode"
+    )
+    return logits, new_cache

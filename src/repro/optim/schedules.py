@@ -1,0 +1,13 @@
+"""Learning-rate schedules (paper §3: 1000-step warmup, cosine to 5% peak)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int, final_ratio: float = 0.05):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    # cosine from end of warmup to `total`
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = final_ratio + (1.0 - final_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return peak_lr * warm * cos

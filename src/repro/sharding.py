@@ -1,0 +1,106 @@
+"""Logical-axis sharding rules.
+
+Models annotate tensors with *logical* axis names ("batch", "heads", ...).
+A ``Rules`` mapping — chosen by the launcher per (mesh, workload) — binds
+logical names to mesh axis names.  This keeps model code mesh-agnostic while
+letting the dry-run / trainer pick DP/FSDP/TP/EP/SP layouts per workload.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# logical axis -> mesh axis (or None = replicated) ------------------------
+_RULES: contextvars.ContextVar[dict] = contextvars.ContextVar("sharding_rules", default={})
+
+# Default layout: DP over "data", TP over "model", DiLoCo replicas over
+# "replica" (bound to the pod axis on the production mesh).
+DEFAULT_RULES = {
+    "replica": "replica",
+    "batch": "data",
+    "seq": None,            # sequence sharding off by default (on for long decode)
+    "embed": "data",        # FSDP: shard the embed dim of weights over data
+    "act_embed": None,      # activation feature axis (kept distinct from weights)
+    "heads": "model",
+    "kv_heads": None,       # kv=8 < 16-way model axis on most assigned archs
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_ff": None,
+    "expert_cap": None,
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "layers": None,
+    "frames": None,
+    "kv_seq": None,         # KV-cache sequence axis (sequence-parallel decode)
+    "groups": "data",       # MoE dispatch groups follow the batch
+}
+
+
+def current_rules() -> dict:
+    r = _RULES.get()
+    return r if r else {}
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[dict]):
+    """Bind logical->mesh rules for the enclosed region (None = no sharding)."""
+    token = _RULES.set(dict(rules) if rules else {})
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def spec(*logical_axes: Optional[str]) -> P:
+    """PartitionSpec for the given logical axes under the current rules."""
+    rules = current_rules()
+    return P(*(rules.get(a) if a is not None else None for a in logical_axes))
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Constrain ``x`` to the current rules' layout. No-op when rules unset."""
+    rules = current_rules()
+    if not rules:
+        return x
+    assert x.ndim == len(logical_axes), (x.shape, logical_axes)
+    s = spec(*logical_axes)
+    if all(a is None for a in s):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, s)
+    except Exception:
+        # No ambient mesh (e.g. plain CPU unit test) — constraints are advisory.
+        return x
+
+
+def tree_constrain(tree, specs):
+    """with_sharding_constraint over a pytree, skipping all-None specs and
+    degrading to a no-op when no mesh is ambient (plain CPU tests)."""
+
+    def one(x, s):
+        if all(a is None for a in s):
+            return x
+        try:
+            return jax.lax.with_sharding_constraint(x, s)
+        except Exception:
+            return x
+
+    import jax.sharding as js
+
+    return jax.tree.map(one, tree, specs,
+                        is_leaf=lambda v: isinstance(v, js.PartitionSpec))
+
+
+def tree_spec(logical_tree):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: spec(*axes),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x),
+    )

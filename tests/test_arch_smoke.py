@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests (assignment requirement): every assigned
+arch instantiates a REDUCED config of the same family and runs one forward
+AND one DiLoCo train step on CPU, asserting output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (
+    ASSIGNED_ARCHS,
+    DiLoCoConfig,
+    OptimizerConfig,
+    TrainConfig,
+    get_config,
+    get_smoke_config,
+)
+from repro.core.diloco import make_trainer
+from repro.models import build_model
+
+
+def _batch(cfg, b=2, t=32, key=None):
+    key = key or jax.random.PRNGKey(0)
+    batch = {
+        "tokens": jax.random.randint(key, (b, t), 0, cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(1), (b, t), 0, cfg.vocab_size),
+    }
+    if cfg.family == "vlm":
+        batch["embeds"] = jax.random.normal(key, (b, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(key, (b, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    loss, metrics = jax.jit(model.loss_fn)(params, batch)
+    assert jnp.isfinite(loss), (arch, float(loss))
+    assert 0 < float(loss) < 3 * np.log(cfg.vocab_size)
+    assert jnp.isfinite(metrics["nll"])
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_one_diloco_train_step(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.moe:
+        cfg = cfg.replace(moe_group_size=64)
+    model = build_model(cfg)
+    tcfg = TrainConfig(global_batch_tokens=2 * 2 * 64, seq_len=64, steps=10)
+    trainer = make_trainer(
+        model, DiLoCoConfig(num_replicas=2, sync_every=1),
+        OptimizerConfig(peak_lr=1e-3, warmup_steps=2), tcfg,
+    )
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    per = _batch(cfg, b=2, t=64)
+    batch = jax.tree.map(lambda x: jnp.stack([x, x]), per)
+    new_state, metrics = jax.jit(trainer.train_step)(state, batch)
+    assert jnp.isfinite(metrics["loss"]), arch
+    # params actually changed and stayed finite
+    moved = False
+    for a, b in zip(jax.tree.leaves(state["inner_params"]),
+                    jax.tree.leaves(new_state["inner_params"])):
+        assert np.isfinite(np.asarray(b)).all(), arch
+        moved |= not np.array_equal(np.asarray(a), np.asarray(b))
+    assert moved, arch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_full_config_matches_published_size(arch):
+    """Analytic param counts land on the published model sizes."""
+    published = {
+        "deepseek-moe-16b": 16.4e9, "granite-moe-3b-a800m": 3.3e9,
+        "jamba-1.5-large-398b": 398e9, "llava-next-mistral-7b": 7.2e9,
+        "gemma-2b": 2.5e9, "qwen3-8b": 8.2e9, "smollm-360m": 0.36e9,
+        "deepseek-67b": 67.4e9, "seamless-m4t-medium": 0.6e9,
+        "mamba2-130m": 0.13e9,
+    }
+    n = get_config(arch).param_count()
+    assert abs(n - published[arch]) / published[arch] < 0.08, (arch, n / 1e9)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "mamba2-130m", "seamless-m4t-medium"])
+def test_decode_matches_full_forward(arch):
+    """Prefill+decode agrees with a full forward pass (serving correctness)."""
+    cfg = get_smoke_config(arch)
+    if cfg.ssm_state:
+        cfg = cfg.replace(ssm_chunk=4)
+    if cfg.moe:
+        cfg = cfg.replace(capacity_factor=8.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, t = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (b, t), 0, cfg.vocab_size)
+    cache = model.init_cache(b, 64)
+    if cfg.is_encdec:
+        from repro.models import encdec
+
+        frames = jax.random.normal(jax.random.PRNGKey(2), (b, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
+        plog, c2 = model.prefill(params, {"frames": frames, "tokens": tokens}, cache)
+        nxt = jnp.argmax(plog[:, -1], -1)[:, None]
+        dlog, _ = model.decode_step(params, {"tokens": nxt, "enc_out": c2["enc_out"]}, c2["kv"], jnp.asarray(t))
+        enc_out = encdec.encode(params, frames, cfg)
+        ref, _ = encdec.decode(params, jnp.concatenate([tokens, nxt], 1), enc_out, cfg, mode="train")
+    else:
+        from repro.models import transformer
+
+        plog, cache = model.prefill(params, {"tokens": tokens}, cache)
+        nxt = jnp.argmax(plog[:, -1], -1)[:, None]
+        dlog, _ = model.decode_step(params, {"tokens": nxt}, cache, jnp.asarray(t))
+        ref, _, _ = transformer.forward(params, jnp.concatenate([tokens, nxt], 1), cfg, mode="train")
+    np.testing.assert_allclose(
+        np.asarray(dlog[:, 0]), np.asarray(ref[:, -1]), atol=2e-3
+    )
+
+
+def test_hybrid_layer_plan():
+    cfg = get_config("jamba-1.5-large-398b")
+    kinds = [cfg.layer_kind(i) for i in range(cfg.n_layers)]
+    assert kinds.count("attn") == 9  # 1:7 attn:mamba over 72 layers
+    mlps = [cfg.mlp_kind(i) for i in range(cfg.n_layers)]
+    assert mlps.count("moe") == 36  # MoE every other layer
+
+
+def test_moe_capacity_overflow_reported():
+    cfg = get_smoke_config("deepseek-moe-16b").replace(capacity_factor=0.5, moe_group_size=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, b=2, t=64)
+    _, metrics = model.loss_fn(params, batch)
+    assert float(metrics["moe_overflow"]) > 0  # tight capacity must drop tokens

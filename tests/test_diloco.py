@@ -1,0 +1,155 @@
+"""Algorithm-level unit tests for DiLoCo (paper Algorithm 1 semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import DiLoCoConfig, OptimizerConfig, TrainConfig, get_config
+from repro.core import compression, outer_opt, streaming
+from repro.core.diloco import make_trainer
+from repro.data import SyntheticLM
+from repro.models import build_model
+
+
+def _trainer(m=1, h=1, **kw):
+    cfg = get_config("tiny-t0")
+    model = build_model(cfg)
+    tcfg = TrainConfig(global_batch_tokens=4 * 128, seq_len=128, steps=50)
+    dkw = dict(num_replicas=m, sync_every=h)
+    dkw.update(kw)
+    trainer = make_trainer(model, DiLoCoConfig(**dkw), OptimizerConfig(peak_lr=1e-3, warmup_steps=5), tcfg)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=128)
+    return trainer, data
+
+
+def test_diloco_m1_h1_eta1_equals_data_parallel():
+    """Paper §2.2: with eta=1, no momentum, H=1, DiLoCo M=1 IS Data-Parallel."""
+    dl, data = _trainer(m=1, h=1, outer_lr=1.0, outer_momentum=0.0, nesterov=False)
+    dp, _ = _trainer(m=1, data_parallel=True)
+    s_dl = dl.init_state(jax.random.PRNGKey(0))
+    s_dp = dp.init_state(jax.random.PRNGKey(0))
+    for t in range(4):
+        b = data.global_batch(t, 1, 2)
+        s_dl, _ = jax.jit(dl.train_step)(s_dl, b)
+        s_dp, _ = jax.jit(dp.train_step)(s_dp, b)
+    for a, b in zip(jax.tree.leaves(s_dl["inner_params"]), jax.tree.leaves(s_dp["inner_params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_outer_gradient_definition():
+    """Δ = θ_global - mean_m θ_m; with eta=1, mu=0: θ' = mean_m θ_m."""
+    trainer, data = _trainer(m=4, h=1, outer_lr=1.0, outer_momentum=0.0, nesterov=False)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    state, _ = jax.jit(trainer.inner_step)(state, data.global_batch(0, 4, 1))
+    synced = trainer.outer_sync(state)
+    for g, p in zip(jax.tree.leaves(synced["global_params"]),
+                    jax.tree.leaves(state["inner_params"])):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(p.astype(jnp.float32).mean(0)), atol=1e-6
+        )
+
+
+def test_outer_nesterov_math():
+    g = jnp.ones((4, 4))
+    d = jnp.full((4, 4), 0.1)
+    m = jnp.full((4, 4), 0.2)
+    new_g, new_m = outer_opt.outer_step((g,), (d,), (m,), lr=0.5, mu=0.9, nesterov=True)
+    expect_m = 0.9 * 0.2 + 0.1
+    expect_step = 0.1 + 0.9 * expect_m
+    np.testing.assert_allclose(np.asarray(new_m[0]), expect_m, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_g[0]), 1.0 - 0.5 * expect_step, rtol=1e-6)
+
+
+def test_inner_state_persists_across_sync():
+    """Paper §2.1: replicas keep inner optimizer state across rounds."""
+    trainer, data = _trainer(m=2, h=2)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    inner = jax.jit(trainer.inner_step)
+    for t in range(2):
+        state, _ = inner(state, data.global_batch(t, 2, 1))
+    m_before = jax.tree.leaves(state["inner_opt"]["m"])[0].copy()
+    state = trainer.outer_sync(state)
+    m_after = jax.tree.leaves(state["inner_opt"]["m"])[0]
+    np.testing.assert_array_equal(np.asarray(m_before), np.asarray(m_after))
+    assert int(state["inner_opt"]["count"][0]) == 2
+
+
+def test_replicas_see_disjoint_data():
+    data = SyntheticLM(vocab_size=64, seq_len=32)
+    b = data.global_batch(0, 4, 2)
+    toks = np.asarray(b["tokens"])
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not np.array_equal(toks[i], toks[j])
+
+
+def test_int8_compression_error_feedback_reduces_bias():
+    key = jax.random.PRNGKey(0)
+    delta = jax.random.normal(key, (256,)) * 1e-3
+    # one-shot quantization error
+    sent, ef = compression.compress_tree((delta,))
+    err1 = float(jnp.abs(sent[0] - delta).mean())
+    # with error feedback, the residual is carried, not lost
+    total_sent = jnp.zeros_like(delta)
+    e = (jnp.zeros_like(delta),)
+    for _ in range(8):
+        sent, e = compression.compress_tree((delta,), e)
+        total_sent += sent[0]
+    avg = total_sent / 8
+    err8 = float(jnp.abs(avg - delta).mean())
+    assert err8 < err1 * 0.6  # EF averages the quantization noise away
+    assert err1 > 0  # quantization is actually lossy
+
+
+def test_compressed_diloco_trains():
+    trainer, data = _trainer(m=2, h=2, compression="int8")
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    assert "ef" in state
+    losses = []
+    inner = jax.jit(trainer.inner_step)
+    outer = jax.jit(trainer.outer_sync)
+    for t in range(20):
+        state, m = inner(state, data.global_batch(t, 2, 4))
+        if (t + 1) % 2 == 0:
+            state = outer(state)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-3:]) < np.mean(losses[:3])
+
+
+def test_streaming_fragments_cover_all_leaves():
+    trainer, data = _trainer(m=2, h=4, streaming_fragments=3)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    n_leaves = len(jax.tree.leaves(state["global_params"]))
+    assign = streaming.fragment_assignment(state["global_params"], 3)
+    assert sorted(set(assign)) == [0, 1, 2]
+    assert len(assign) == n_leaves
+    # every fragment is due exactly once per H-step window
+    due = [f for s in range(1, 5) for f in streaming.fragments_due(s, 3, 4)]
+    assert sorted(due) == [0, 1, 2]
+
+
+def test_streaming_equals_full_sync_when_one_fragment():
+    """P=1 streaming == classic DiLoCo outer sync."""
+    tr_s, data = _trainer(m=2, h=2, streaming_fragments=1)
+    tr_c, _ = _trainer(m=2, h=2)
+    s1 = tr_s.init_state(jax.random.PRNGKey(0))
+    s2 = tr_c.init_state(jax.random.PRNGKey(0))
+    inner = jax.jit(tr_s.inner_step)
+    for t in range(4):
+        b = data.global_batch(t, 2, 2)
+        s1, _ = inner(s1, b)
+        s2, _ = inner(s2, b)
+        for f in streaming.fragments_due(t + 1, 1, 2):
+            s1 = streaming.outer_sync_fragment(tr_s, s1, f)
+        if (t + 1) % 2 == 0:
+            s2 = tr_c.outer_sync(s2)
+    for a, b in zip(jax.tree.leaves(s1["global_params"]), jax.tree.leaves(s2["global_params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_eval_uses_global_model():
+    trainer, data = _trainer(m=2, h=100)  # never synced
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    state, _ = jax.jit(trainer.inner_step)(state, data.global_batch(0, 2, 1))
+    p = trainer.eval_params(state)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(state["global_params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

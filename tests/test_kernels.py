@@ -1,0 +1,186 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (bh, bkv, sq, skv, d, causal, dtype)
+    (4, 4, 256, 256, 64, True, jnp.float32),
+    (8, 2, 256, 256, 128, True, jnp.float32),
+    (4, 2, 128, 384, 64, False, jnp.float32),
+    (2, 1, 256, 256, 32, True, jnp.float32),
+    (4, 4, 128, 128, 64, True, jnp.bfloat16),
+    (2, 2, 384, 128, 256, False, jnp.float32),   # gemma-style head_dim 256
+]
+
+
+@pytest.mark.parametrize("bh,bkv,sq,skv,d,causal,dtype", FLASH_CASES)
+def test_flash_attention_fwd(bh, bkv, sq, skv, d, causal, dtype):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (bh, sq, d), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (bkv, skv, d), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (bkv, skv, d), dtype)
+    o = flash_attention(q, k, v, causal)
+    o_ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(o_ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("bh,bkv,sq,skv,d,causal,dtype", FLASH_CASES[:4])
+def test_flash_attention_grads(bh, bkv, sq, skv, d, causal, dtype):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (bh, sq, d), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (bkv, skv, d), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (bkv, skv, d), dtype)
+    w = jnp.cos(jnp.arange(d))
+
+    g1 = jax.grad(lambda *a: (flash_attention(*a, causal) * w).sum(), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: (attention_ref(*a, causal=causal) * w).sum(), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fused adamw
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(1000,), (64, 64), (3, 17, 29), (256 * 128 + 1,)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_adamw(shape, dtype):
+    from repro.kernels.fused_adamw.ops import fused_adamw
+    from repro.kernels.fused_adamw.ref import adamw_ref
+
+    key = jax.random.PRNGKey(0)
+    p = jax.random.normal(key, shape, dtype)
+    g = jax.random.normal(jax.random.PRNGKey(1), shape, dtype)
+    m = jax.random.normal(jax.random.PRNGKey(2), shape, jnp.float32) * 0.1
+    v = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), shape, jnp.float32)) * 0.01
+    kw = dict(lr=3e-4, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.02, bc1=0.271, bc2=0.039)
+    out_k = fused_adamw(p, g, m, v, **kw)
+    out_r = adamw_ref(p, g, m, v, **kw)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-5, rtol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# outer nesterov
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m_replicas", [1, 2, 8])
+@pytest.mark.parametrize("shape", [(513,), (32, 33)])
+def test_outer_nesterov(m_replicas, shape):
+    from repro.kernels.outer_nesterov.ops import outer_nesterov
+    from repro.kernels.outer_nesterov.ref import outer_ref
+
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, shape)
+    d = jax.random.normal(jax.random.PRNGKey(1), (m_replicas, *shape)) * 0.01
+    m = jax.random.normal(jax.random.PRNGKey(2), shape) * 0.001
+    a = outer_nesterov(g, d, m, lr=0.7, mu=0.9)
+    b = outer_ref(g, d, m, lr=0.7, mu=0.9, nesterov=True)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# delta quant
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(100,), (777, 33), (256 * 128,), (5, 7, 11)])
+def test_delta_quant_roundtrip(shape):
+    from repro.kernels.delta_quant.ops import dequantize, quantize
+
+    x = jax.random.normal(jax.random.PRNGKey(0), shape) * 0.01
+    q, s, meta = quantize(x)
+    xr = dequantize(q, s, meta)
+    assert q.dtype == jnp.int8
+    # error bounded by half a quantization bin of the per-block scale
+    assert float(jnp.abs(xr - x).max()) <= float(s.max()) * 0.51
+
+
+def test_delta_quant_matches_ref_blocks():
+    from repro.kernels.delta_quant.ops import _to_lanes, quantize
+    from repro.kernels.delta_quant.ref import quantize_ref
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000, 64))
+    q, s, _ = quantize(x)
+    x2, _ = _to_lanes(x)
+    qr, sr = quantize_ref(x2)
+    # fp rounding ties at .5 may flip the odd element by one code point
+    diff = np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32))
+    assert (diff <= 1).all()
+    assert (diff != 0).mean() < 1e-3
+    np.testing.assert_allclose(np.asarray(s[:, 0]), np.asarray(sr[:, 0]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # (b, l, h, p, n, g, chunk)
+    (2, 64, 8, 16, 32, 1, 16),
+    (1, 128, 8, 32, 16, 2, 32),
+    (2, 96, 16, 16, 64, 1, 32),
+]
+
+
+@pytest.mark.parametrize("b,l,h,p,n,g,chunk", SSD_CASES)
+def test_ssd_scan(b, l, h, p, n, g, chunk):
+    from repro.kernels.ssd_scan.ops import ssd_chunk_scan
+    from repro.kernels.ssd_scan.ref import ssd_ref
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, l, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (b, l, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (h,)) * 0.3)
+    B = jax.random.normal(jax.random.PRNGKey(3), (b, l, g, n)) * 0.3
+    C = jax.random.normal(jax.random.PRNGKey(4), (b, l, g, n)) * 0.3
+    y1, s1 = ssd_chunk_scan(x, dt, A, B, C, chunk=chunk)
+    y2, s2 = ssd_ref(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_kernel_matches_recurrent_reference():
+    """Oracle-of-the-oracle: chunked == naive token-by-token recurrence."""
+    b, l, h, p, n = 1, 32, 4, 8, 16
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, l, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (b, l, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (h,)) * 0.3)
+    B = jax.random.normal(jax.random.PRNGKey(3), (b, l, 1, n)) * 0.3
+    C = jax.random.normal(jax.random.PRNGKey(4), (b, l, 1, n)) * 0.3
+
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(l):
+        dA = jnp.exp(dt[:, t] * A)                        # (b, h)
+        upd = dt[:, t][..., None, None] * x[:, t][..., None] * B[:, t, 0][:, None, None, :]
+        state = state * dA[..., None, None] + upd
+        ys.append(jnp.einsum("bhpn,bn->bhp", state, C[:, t, 0]))
+    y_naive = jnp.stack(ys, axis=1)
+
+    from repro.kernels.ssd_scan.ops import ssd_chunk_scan
+
+    y_k, s_k = ssd_chunk_scan(x, dt, A, B, C, chunk=8)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_naive), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(state), atol=1e-4, rtol=1e-4)

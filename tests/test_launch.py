@@ -1,0 +1,95 @@
+"""Launch-layer unit tests (no 512-device init needed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import cells, get_config, get_smoke_config, shape_by_name
+from repro.launch.costs import analytic_costs, fwd_flops_total
+from repro.models import build_model, layers, transformer
+
+
+def test_cells_skip_long_for_full_attention():
+    assert [s.name for s in cells("qwen3-8b")] == ["train_4k", "prefill_32k", "decode_32k"]
+    assert "long_500k" in [s.name for s in cells("mamba2-130m")]
+    assert "long_500k" in [s.name for s in cells("jamba-1.5-large-398b")]
+
+
+def test_analytic_costs_sanity():
+    cfg = get_config("qwen3-8b")
+    shape = shape_by_name("train_4k")
+    c = analytic_costs(cfg, shape, 256)
+    # train flops ~ 4x fwd ~ 8*N*D within 2x (attention adds more)
+    base = 8 * cfg.active_param_count() * shape.global_batch * shape.seq_len
+    assert 0.5 < c["flops_total"] / base < 2.5
+    d = analytic_costs(cfg, shape_by_name("decode_32k"), 256)
+    # decode flops ~ 2*N*batch
+    base = 2 * cfg.active_param_count() * 128
+    assert 0.5 < d["flops_total"] / base < 3.0
+
+
+def test_fwd_flops_scale_with_depth():
+    cfg = get_config("smollm-360m")
+    a = fwd_flops_total(cfg, 1, 1024)
+    b = fwd_flops_total(cfg.replace(n_layers=64), 1, 1024)
+    assert b > 1.6 * a
+
+
+def test_probe_cfg_shrinks_depth():
+    from repro.launch.dryrun import _probe_cfg
+
+    cfg = get_config("jamba-1.5-large-398b")
+    p1 = _probe_cfg(cfg, 1)
+    assert p1.n_layers == 8 and not p1.scan_layers
+    p2 = _probe_cfg(cfg, 2)
+    assert p2.n_layers == 16
+    # deepseek-moe keeps its dense prefix layer
+    cfg = get_config("deepseek-moe-16b")
+    assert _probe_cfg(cfg, 2).n_layers == 3
+
+
+def test_flash_kernel_path_matches_jnp_attention():
+    """The TPU flash-kernel swap point is numerically equivalent."""
+    cfg = get_smoke_config("qwen3-8b").replace(head_dim=32, remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 128), 0, cfg.vocab_size)
+    ref, _, _ = transformer.forward(params, tokens, cfg, mode="train")
+    layers.USE_FLASH_KERNEL = True
+    try:
+        out, _, _ = transformer.forward(params, tokens, cfg, mode="train")
+    finally:
+        layers.USE_FLASH_KERNEL = False
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=3e-3, rtol=3e-3
+    )
+
+
+def test_zero1_opt_specs_differ_from_param_specs():
+    from jax.sharding import PartitionSpec as P
+
+    from repro import sharding
+    from repro.configs import DiLoCoConfig, OptimizerConfig, TrainConfig
+    from repro.core.diloco import make_trainer
+
+    cfg = get_smoke_config("smollm-360m")
+    model = build_model(cfg)
+    trainer = make_trainer(model, DiLoCoConfig(num_replicas=1),
+                           OptimizerConfig(), TrainConfig(steps=10))
+    rules = dict(sharding.DEFAULT_RULES)
+    rules.update({"embed": None, "opt_embed": "data"})
+    with sharding.use_rules(rules):
+        specs = trainer.state_partition_specs()
+    p_leaves = jax.tree.leaves(specs["inner_params"], is_leaf=lambda x: isinstance(x, P))
+    m_leaves = jax.tree.leaves(specs["inner_opt"]["m"], is_leaf=lambda x: isinstance(x, P))
+    assert not any("data" in str(s) for s in p_leaves)   # params replicated over data
+    assert any("data" in str(s) for s in m_leaves)       # moments sharded (ZeRO-1)
+
+
+def test_collective_traffic_bf16_counting():
+    from repro.launch.roofline import collective_traffic
+
+    hlo = "%ar = f32[256]{0} all-reduce(%x), replica_groups={{0,1}}, to_apply=%a"
+    raw = collective_traffic(hlo)["total_bytes"]
+    corr = collective_traffic(hlo, f32_as_bf16=True)["total_bytes"]
+    assert raw == 2 * corr

@@ -1,0 +1,181 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compute_util as cu
+from repro.core import outer_opt, scaling_laws as sl
+from repro.core import wallclock as wc
+from repro.optim import clip_by_global_norm, warmup_cosine
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# DiLoCo outer-step algebra
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    lr=st.floats(0.05, 1.0),
+    mu=st.floats(0.0, 0.95),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_outer_step_fixed_point(lr, mu, seed):
+    """Zero outer gradient + zero momentum => global model unchanged."""
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (16,))
+    z = jnp.zeros((16,))
+    new_g, new_m = outer_opt.outer_step((g,), (z,), (z,), lr=lr, mu=mu, nesterov=True)
+    np.testing.assert_allclose(np.asarray(new_g[0]), np.asarray(g))
+    np.testing.assert_allclose(np.asarray(new_m[0]), 0.0)
+
+
+@settings(**SETTINGS)
+@given(
+    lr=st.floats(0.1, 1.0),
+    scale=st.floats(0.1, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_outer_step_is_linear_in_delta(lr, scale, seed):
+    """SGD(+momentum) outer update is linear in the outer gradient."""
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (16,))
+    d = jax.random.normal(jax.random.fold_in(key, 1), (16,)) * 0.01
+    z = jnp.zeros((16,))
+    g1, _ = outer_opt.outer_step((g,), (d,), (z,), lr=lr, mu=0.9, nesterov=True)
+    g2, _ = outer_opt.outer_step((g,), (d * scale,), (z,), lr=lr, mu=0.9, nesterov=True)
+    upd1 = np.asarray(g - g1[0])
+    upd2 = np.asarray(g - g2[0])
+    # float32: the update is algebraically linear; allow rounding slack
+    np.testing.assert_allclose(upd2, upd1 * scale, rtol=1e-3, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 8))
+def test_identical_replicas_sync_to_inner_model(seed, m):
+    """If all replicas hold the same params θ, outer sync with eta=1, mu=0
+    moves the global model exactly to θ (consensus is a fixed point)."""
+    key = jax.random.PRNGKey(seed)
+    theta = jax.random.normal(key, (8,))
+    g_old = jax.random.normal(jax.random.fold_in(key, 1), (8,))
+    deltas = jnp.broadcast_to(g_old - theta, (m, 8))
+    z = jnp.zeros((8,))
+    d_mean = deltas.mean(0)
+    new_g, _ = outer_opt.outer_step((g_old,), (d_mean,), (z,), lr=1.0, mu=0.0, nesterov=False)
+    np.testing.assert_allclose(np.asarray(new_g[0]), np.asarray(theta), rtol=2e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# Compression
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 5000),
+    scale=st.floats(1e-6, 1e3),
+)
+def test_quantization_error_bound(seed, n, scale):
+    from repro.kernels.delta_quant.ops import dequantize, quantize
+
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * scale
+    q, s, meta = quantize(x)
+    xr = dequantize(q, s, meta)
+    # error <= half a bin of the block scale
+    assert float(jnp.abs(xr - x).max()) <= float(s.max()) * 0.51 + 1e-12
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_error_feedback_telescopes(seed):
+    """sum of transmitted == sum of true deltas + residual (no signal lost)."""
+    from repro.core import compression
+
+    key = jax.random.PRNGKey(seed)
+    deltas = [jax.random.normal(jax.random.fold_in(key, i), (64,)) * 1e-3 for i in range(5)]
+    ef = (jnp.zeros((64,)),)
+    sent_total = jnp.zeros((64,))
+    for d in deltas:
+        sent, ef = compression.compress_tree((d,), ef)
+        sent_total = sent_total + sent[0]
+    true_total = sum(deltas)
+    np.testing.assert_allclose(
+        np.asarray(sent_total + ef[0]), np.asarray(true_total), rtol=1e-4, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# Schedules / clipping
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(step=st.integers(0, 2000), peak=st.floats(1e-5, 1e-1))
+def test_schedule_bounds(step, peak):
+    lr = float(warmup_cosine(step, peak_lr=peak, warmup=100, total=2000))
+    assert 0.0 <= lr <= peak * (1 + 1e-6)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), clip=st.floats(0.1, 10.0))
+def test_clip_never_increases_norm(seed, clip):
+    g = {"x": jax.random.normal(jax.random.PRNGKey(seed), (32,)) * 5}
+    clipped, norm = clip_by_global_norm(g, clip)
+    new_norm = float(jnp.linalg.norm(clipped["x"]))
+    assert new_norm <= min(float(norm), clip) * (1 + 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock / CU models
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.floats(1e8, 1e12),
+    w=st.floats(1e9, 1e12),
+    h=st.integers(1, 300),
+)
+def test_cu_monotonic_in_bandwidth_and_h(n, w, h):
+    a = cu.compute_utilization(n, 1.0, w, sync_every=h)
+    b = cu.compute_utilization(n, 1.0, w * 2, sync_every=h)
+    c = cu.compute_utilization(n, 1.0, w, sync_every=h * 2)
+    assert 0 < a <= b <= 1 and a <= c <= 1
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.floats(1e8, 1e11),
+    batch=st.integers(2**16, 2**24),
+    h=st.integers(2, 300),
+)
+def test_diloco_never_communicates_more_than_dp_cross_dc(n, batch, h):
+    kw = dict(n_params=n, token_budget=20 * n, batch_tokens=batch, cross_net=wc.LOW)
+    dp = wc.train_time(algorithm="dp", **kw)
+    dl = wc.train_time(algorithm="diloco", m_replicas=4, sync_every=h, **kw)
+    assert dl["comm_s"] <= dp["comm_s"] * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Scaling-law fits
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    loga=st.floats(1.0, 4.0),
+    alpha=st.floats(-0.2, -0.01),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_power_law_fit_roundtrip(loga, alpha, seed):
+    rng = np.random.default_rng(seed)
+    A = float(np.exp(loga))
+    n = np.geomspace(1e7, 1e10, 8)
+    y = A * n ** alpha * np.exp(rng.normal(0, 1e-4, 8))
+    A2, a2 = sl.fit_power_law(n, y)
+    assert abs(a2 - alpha) < 5e-3
+    assert abs(np.log(A2) - loga) < 0.1

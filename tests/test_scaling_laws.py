@@ -1,0 +1,80 @@
+"""Scaling-law machinery tests — including validation against the paper's
+own published Tables 4/7/10 (the fitting code must recover their fits)."""
+import numpy as np
+import pytest
+
+from repro.core import scaling_laws as sl
+
+
+def test_power_law_fit_recovers_synthetic():
+    rng = np.random.default_rng(0)
+    A, alpha = 17.5, -0.093
+    n = np.geomspace(3e7, 3e9, 9)
+    y = A * n ** alpha * np.exp(rng.normal(0, 1e-3, n.size))
+    A2, a2 = sl.fit_power_law(n, y)
+    assert abs(A2 - A) / A < 0.05 and abs(a2 - alpha) < 1e-3
+
+
+def test_joint_fit_recovers_synthetic():
+    rng = np.random.default_rng(0)
+    A, alpha, beta = 19.0, -0.098, 0.012
+    N, M = np.meshgrid(np.geomspace(3e7, 3e9, 7), [1, 2, 4, 8])
+    y = A * N ** alpha * M ** beta * np.exp(rng.normal(0, 5e-4, N.shape))
+    A2, a2, b2 = sl.fit_joint_power_law(N.ravel(), M.ravel(), y.ravel())
+    assert abs(a2 - alpha) < 1e-3 and abs(b2 - beta) < 1e-3
+
+
+def test_fit_recovers_paper_table7_from_table4():
+    """Fitting the paper's published Table-4 losses must reproduce the
+    paper's own Table-7 power-law coefficients."""
+    for algo, losses in sl.PAPER_TABLE4_LOSS.items():
+        A, alpha = sl.fit_power_law(sl.PAPER_MODEL_SIZES, losses)
+        A_ref, alpha_ref = sl.PAPER_TABLE7_FITS[algo]
+        assert abs(alpha - alpha_ref) < 4e-3, (algo, alpha, alpha_ref)
+        assert abs(A - A_ref) / A_ref < 0.12, (algo, A, A_ref)
+
+
+def test_joint_fit_recovers_paper_table10():
+    n, m, y = [], [], []
+    for i, mm in enumerate([1, 2, 4, 8]):
+        losses = sl.PAPER_TABLE4_LOSS[f"diloco_m{mm}"]
+        n.extend(sl.PAPER_MODEL_SIZES)
+        m.extend([mm] * len(losses))
+        y.extend(losses)
+    A, alpha, beta = sl.fit_joint_power_law(n, m, y)
+    A_ref, alpha_ref, beta_ref = sl.PAPER_TABLE10_JOINT["L"]
+    assert abs(alpha - alpha_ref) < 4e-3
+    assert abs(beta - beta_ref) < 4e-3
+    assert abs(A - A_ref) / A_ref < 0.12
+
+
+def test_quadratic_batch_optimum():
+    b = np.array([2**i for i in range(5, 12)])
+    true_opt = 2 ** 8.4
+    loss = 0.01 * (np.log2(b) - np.log2(true_opt)) ** 2 + 2.5
+    est = sl.quadratic_log2_optimum(b, loss)
+    assert abs(np.log2(est) - np.log2(true_opt)) < 0.05
+
+
+def test_parametric_forms_fit_paper_data():
+    """Form 3 (paper's best) must fit the published losses well."""
+    n, m, y = [], [], []
+    for mm in [1, 2, 4, 8]:
+        losses = sl.PAPER_TABLE4_LOSS[f"diloco_m{mm}"]
+        n.extend(sl.PAPER_MODEL_SIZES)
+        m.extend([mm] * len(losses))
+        y.extend(losses)
+    n, m, y = map(np.asarray, (n, m, y))
+    holdout = n >= 2.4e9
+    params, _, res = sl.fit_parametric("AN^(a+bM)+C", n, m, y,
+                                       restarts=32, holdout_mask=holdout)
+    assert res < 0.01  # paper reports 0.0025 on their full sweep data
+    pred = sl.parametric_predict("AN^(a+bM)+C", params, n, m)
+    # restarts are selected by held-out residual (paper §6.5); the train-set
+    # residual is secondary — just require the same order of magnitude
+    assert sl.residual(y[~holdout], pred[~holdout]) < 0.02
+
+
+def test_residual_metric():
+    assert sl.residual([1.0], [1.0]) == 0.0
+    assert abs(sl.residual([np.e], [1.0]) - 1.0) < 1e-9

@@ -1,0 +1,164 @@
+"""End-to-end behaviour tests: the paper's algorithm on the full stack."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DiLoCoConfig, OptimizerConfig, TrainConfig, get_config
+from repro.core.diloco import make_trainer
+from repro.data import SyntheticLM
+from repro.models import build_model
+
+
+def _mk(arch="tiny-t0", *, algo="diloco", m=1, h=5, steps=40, lr=3e-3, **dkw):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    tcfg = TrainConfig(global_batch_tokens=8 * 128, seq_len=128, steps=steps)
+    dcfg = DiLoCoConfig(
+        num_replicas=m, sync_every=h, data_parallel=(algo == "dp"), **dkw
+    )
+    ocfg = OptimizerConfig(peak_lr=lr, warmup_steps=5)
+    trainer = make_trainer(model, dcfg, ocfg, tcfg)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=128)
+    return trainer, data
+
+
+def _run(trainer, data, steps, seqs=2):
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    inner = jax.jit(trainer.inner_step)
+    outer = jax.jit(trainer.outer_sync)
+    losses = []
+    for t in range(steps):
+        batch = data.global_batch(t, trainer.M, seqs)
+        state, m = inner(state, batch)
+        if not trainer.dcfg.data_parallel and (t + 1) % trainer.dcfg.sync_every == 0:
+            state = outer(state)
+        losses.append(float(m["loss"]))
+    return state, losses
+
+
+def test_dp_training_reduces_loss():
+    trainer, data = _mk(algo="dp", steps=40)
+    _, losses = _run(trainer, data, 40, seqs=8)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2
+
+
+def test_diloco_m2_training_reduces_loss_toward_floor():
+    trainer, data = _mk(m=2, h=5, steps=60)
+    _, losses = _run(trainer, data, 60, seqs=4)
+    floor = data.entropy_floor()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2
+    assert np.mean(losses[-5:]) > floor - 0.1  # can't beat the source entropy
+
+
+def test_fused_train_step_matches_split_loop():
+    """lax.cond-fused train_step == python-scheduled inner/outer."""
+    trainer, data = _mk(m=2, h=3, steps=12)
+    s_fused = trainer.init_state(jax.random.PRNGKey(0))
+    s_split = trainer.init_state(jax.random.PRNGKey(0))
+    fused = jax.jit(trainer.train_step)
+    inner = jax.jit(trainer.inner_step)
+    outer = jax.jit(trainer.outer_sync)
+    for t in range(7):
+        batch = data.global_batch(t, 2, 2)
+        s_fused, _ = fused(s_fused, batch)
+        s_split, _ = inner(s_split, batch)
+        if (t + 1) % 3 == 0:
+            s_split = outer(s_split)
+    for a, b in zip(jax.tree.leaves(s_fused), jax.tree.leaves(s_split)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0)
+
+
+def test_checkpoint_restart_resumes_exactly(tmp_path):
+    """Fault tolerance: kill at step 10, restart, reach identical state."""
+    from repro.checkpoint import Checkpointer
+
+    trainer, data = _mk(m=2, h=4, steps=20)
+    inner = jax.jit(trainer.inner_step)
+    outer = jax.jit(trainer.outer_sync)
+
+    def advance(state, t0, t1):
+        for t in range(t0, t1):
+            state, _ = inner(state, data.global_batch(t, 2, 2))
+            if (t + 1) % 4 == 0:
+                state = outer(state)
+        return state
+
+    # uninterrupted run
+    ref = advance(trainer.init_state(jax.random.PRNGKey(0)), 0, 16)
+
+    # interrupted run: checkpoint at 10, restore into a FRESH process state
+    ck = Checkpointer(str(tmp_path), keep=2)
+    state = advance(trainer.init_state(jax.random.PRNGKey(0)), 0, 10)
+    ck.save(state, 10)
+    template = trainer.init_state(jax.random.PRNGKey(42))  # different init
+    restored, step = ck.restore(template)
+    assert step == 10
+    resumed = advance(restored, 10, 16)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(resumed)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0)
+
+
+def test_async_checkpointing(tmp_path):
+    import os
+
+    from repro.checkpoint import Checkpointer
+
+    trainer, data = _mk(steps=4)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        ck.save_async(state, s)
+    ck.wait()
+    assert ck.latest_step() == 3
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(kept) == 2
+
+
+def test_straggler_dropout_excludes_replica():
+    """A straggler's delta must not influence the outer update."""
+    from repro.core import elastic
+
+    trainer, data = _mk(m=4, h=2, steps=10, outer_momentum=0.0, nesterov=False)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    state, _ = jax.jit(trainer.inner_step)(state, data.global_batch(0, 4, 2))
+    # corrupt replica 3's params wildly
+    bad = jax.tree.map(lambda p: p.at[3].mul(100.0), state["inner_params"])
+    state_bad = {**state, "inner_params": bad}
+    w = elastic.participation_weights(jnp.array([True, True, True, False]))
+    synced = trainer.outer_sync(state_bad, w)
+    synced_ref = trainer.outer_sync(state, jnp.array([1.0, 1.0, 1.0, 0.0]))
+    for a, b in zip(jax.tree.leaves(synced["global_params"]),
+                    jax.tree.leaves(synced_ref["global_params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_elastic_resize_preserves_global_model():
+    from repro.core import elastic
+
+    trainer, data = _mk(m=2, h=2, steps=10)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    state, _ = jax.jit(trainer.inner_step)(state, data.global_batch(0, 2, 2))
+    state = trainer.outer_sync(state)
+    grown = elastic.resize_replicas(trainer, state, 4)
+    assert all(l.shape[0] == 4 for l in jax.tree.leaves(grown["inner_params"]))
+    for leaf, g in zip(jax.tree.leaves(grown["inner_params"]),
+                       jax.tree.leaves(grown["global_params"])):
+        np.testing.assert_allclose(np.asarray(leaf[3]), np.asarray(g).astype(leaf.dtype))
+    shrunk = elastic.resize_replicas(trainer, state, 1)
+    assert all(l.shape[0] == 1 for l in jax.tree.leaves(shrunk["inner_params"]))
+
+
+def test_train_driver_cli_smoke(tmp_path):
+    from repro.launch.train import build_argparser, make_run, train_loop
+
+    args = build_argparser().parse_args(
+        ["--arch", "tiny-t0", "--algorithm", "diloco", "--replicas", "2",
+         "--sync-every", "4", "--steps", "8", "--batch-tokens", "2048",
+         "--seq-len", "128", "--warmup", "2", "--eval-every", "8",
+         "--checkpoint-dir", str(tmp_path), "--checkpoint-every", "4"]
+    )
+    cfg, trainer, data, steps = make_run(args)
+    state, history = train_loop(args, trainer, data, steps, quiet=True)
+    assert len(history) == 8
+    assert "eval_nll" in history[-1]

@@ -1,0 +1,76 @@
+"""Appendix-A wall-clock model + Table-6 compute-utilization simulator."""
+import numpy as np
+
+from repro.core import compute_util as cu
+from repro.core import wallclock as wc
+
+
+def test_allreduce_matches_formula():
+    # 2N/W (1-1/R) + eps, N in bits
+    t = wc.allreduce_time(1e9, 64, wc.MEDIUM)
+    expect = 2 * 1e9 * 16 / 100e9 * (1 - 1 / 64) + 1e-3
+    assert abs(t - expect) < 1e-12
+
+
+def test_diloco_m2_inner_comm_stays_within_datacenter():
+    """Cross-DC traffic must drop by ~H for DiLoCo M>=2 vs Data-Parallel."""
+    kw = dict(n_params=1e9, token_budget=20e9, batch_tokens=2**20, cross_net=wc.LOW)
+    dp = wc.train_time(algorithm="dp", **kw)
+    dl = wc.train_time(algorithm="diloco", m_replicas=2, sync_every=30, **kw)
+    assert dl["comm_s"] < dp["comm_s"] / 5
+    assert dl["total_s"] < dp["total_s"]
+
+
+def test_diloco_m1_adds_outer_overhead():
+    kw = dict(n_params=1e9, token_budget=20e9, batch_tokens=2**20, cross_net=wc.HIGH)
+    dp = wc.train_time(algorithm="dp", **kw)
+    dl1 = wc.train_time(algorithm="diloco", m_replicas=1, sync_every=30, **kw)
+    ratio = dl1["comm_s"] / dp["comm_s"]
+    assert abs(ratio - (1 + 1 / 30)) < 1e-6
+
+
+def test_bigger_batch_reduces_wallclock():
+    """Horizontal scalability: doubling batch doubles chips, halves steps."""
+    a = wc.train_time(n_params=1e9, token_budget=20e9, batch_tokens=2**19,
+                      algorithm="diloco", m_replicas=2, cross_net=wc.LOW)
+    b = wc.train_time(n_params=1e9, token_budget=20e9, batch_tokens=2**21,
+                      algorithm="diloco", m_replicas=2, cross_net=wc.LOW)
+    assert b["total_s"] < a["total_s"]
+    assert b["chips"] == 4 * a["chips"]
+
+
+def test_cu_increases_with_bandwidth_and_h():
+    cu1 = cu.compute_utilization(10e9, 0.8, 10e9, sync_every=1)
+    cu2 = cu.compute_utilization(10e9, 0.8, 100e9, sync_every=1)
+    cu3 = cu.compute_utilization(10e9, 0.8, 10e9, sync_every=30)
+    assert cu2 > cu1 and cu3 > cu1
+
+
+def test_required_bandwidth_inverts_cu():
+    w = cu.required_bandwidth(10e9, 0.8, 0.8, sync_every=10)
+    got = cu.compute_utilization(10e9, 0.8, w, sync_every=10)
+    assert abs(got - 0.8) < 1e-9
+
+
+def test_table6_h_scaling_matches_paper_structure():
+    """Bandwidth requirement must scale ~1/H; absolute values must land near
+    the paper's published numbers (their grid snaps ~1.21x per step)."""
+    rows = {(r["model"], r["method"]): r for r in cu.table6()}
+    dp = rows[("Chinchilla-10B", "Data-Parallel")]["gbits"]
+    h100 = rows[("Chinchilla-10B", "DiLoCo, H=100")]["gbits"]
+    # paper: DP@50% = 104.8 Gbit/s for Chinchilla-10B; ours analytic 98.4
+    assert abs(dp[0] - 104.8) / 104.8 < 0.25
+    # paper: Llama3-405B DP@50% = 126.5; ours 122.6
+    llama = rows[("Llama3-405B", "Data-Parallel")]["gbits"]
+    assert abs(llama[0] - 126.5) / 126.5 < 0.1
+    for a, b in zip(dp, h100):
+        assert abs(a / b - 100.0) < 1e-6  # exact 1/H scaling
+    # DiLoCo H=1 == Data-Parallel (paper Table 6, first two rows)
+    h1 = rows[("Chinchilla-10B", "DiLoCo, H=1")]["gbits"]
+    np.testing.assert_allclose(dp, h1)
+
+
+def test_compression_halves_bandwidth():
+    base = {r["method"]: r for r in cu.table6()}["DiLoCo, H=100"]["gbits"]
+    comp = {r["method"]: r for r in cu.table6(compression_ratio=2.0)}["DiLoCo, H=100"]["gbits"]
+    np.testing.assert_allclose(np.asarray(base) / 2, comp)
