@@ -1,0 +1,20 @@
+# Tier-1 verification + hot-path smoke. `make verify` is what CI runs.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify test bench-smoke bench
+
+verify: test bench-smoke
+
+test:
+	$(PY) -m pytest -x -q
+
+# 20-step engine smoke: catches hot-path perf regressions loudly (the run
+# itself failing — compile error, shape drift, engine/loop divergence — is
+# the signal; thresholds live in the full bench's JSON history)
+bench-smoke:
+	$(PY) -m benchmarks.bench_engine --steps 20 --windows 1 \
+	    --out results/BENCH_engine_smoke.json
+
+bench:
+	$(PY) -m benchmarks.bench_engine

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.configs import DiLoCoConfig, OptimizerConfig, TrainConfig, get_config
 from repro.core.diloco import make_trainer
+from repro.core.superstep import SuperstepEngine
 from repro.data import SyntheticLM
 from repro.models import build_model
 
@@ -70,6 +71,7 @@ def run_experiment(
     seed: int = 0,
     eval_batches: int = 8,
     force: bool = False,
+    engine: str = "superstep",      # superstep | per-step (see core.superstep)
 ) -> dict:
     """Train to the budget; return {final_eval, n_params, steps, s_per_step}."""
     cfg = get_config(arch)
@@ -80,7 +82,7 @@ def run_experiment(
     steps = max(int(budget_mult * n_params / batch_tokens), 20)
     spec = dict(arch=arch, algo=algo, m=m, h=h, batch_tokens=batch_tokens,
                 lr=round(lr, 8), eta=eta, budget_mult=budget_mult, seed=seed,
-                seq=SEQ_LEN, v=2)
+                seq=SEQ_LEN, engine=engine, v=3)
     key = _key(spec)
     cache = _load()
     if key in cache and not force:
@@ -103,19 +105,26 @@ def run_experiment(
 
     seqs_per_replica = max(1, batch_tokens // SEQ_LEN // trainer.M)
     state = trainer.init_state(jax.random.PRNGKey(seed))
-    inner = jax.jit(trainer.inner_step)
-    outer = jax.jit(trainer.outer_sync)
     eval_step = jax.jit(trainer.eval_step)
     t0 = time.time()
-    losses = []
-    for t in range(steps):
-        batch = data.global_batch(t, trainer.M, seqs_per_replica)
-        state, metrics = inner(state, batch)
-        if algo == "diloco" and (t + 1) % h == 0:
-            state = outer(state)
-        losses.append(float(metrics["loss"]))
+    if engine == "superstep":
+        # one compiled, donated executable per outer round; one host sync
+        # per round (the sweep's hot path — see repro.core.superstep)
+        eng = SuperstepEngine(trainer, data, seqs_per_replica)
+        state, mets = eng.run(state, steps)
+        losses = [float(x) for x in np.asarray(mets["loss"])]
+    else:
+        inner = trainer.jit_inner_step()
+        outer = trainer.jit_outer_sync()
+        losses = []
+        for t in range(steps):
+            batch = data.global_batch(t, trainer.M, seqs_per_replica)
+            state, metrics = inner(state, batch)
+            if algo == "diloco" and (t + 1) % h == 0:
+                state = outer(state)
+            losses.append(float(metrics["loss"]))
     if algo == "diloco" and steps % h != 0:
-        state = outer(state)  # final sync so eval sees all progress
+        state = trainer.jit_outer_sync()(state)  # final sync so eval sees all progress
     dt = time.time() - t0
 
     evals = [

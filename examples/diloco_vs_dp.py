@@ -8,6 +8,7 @@ import numpy as np
 
 from repro.configs import DiLoCoConfig, OptimizerConfig, TrainConfig, get_config
 from repro.core.diloco import make_trainer
+from repro.core.superstep import SuperstepEngine
 from repro.data import SyntheticLM
 from repro.models import build_model
 
@@ -26,13 +27,11 @@ def run(algo, m=1, batch_tokens=4096, h=15):
         TrainConfig(global_batch_tokens=batch_tokens, seq_len=128, steps=steps),
     )
     state = trainer.init_state(jax.random.PRNGKey(0))
-    inner, outer = jax.jit(trainer.inner_step), jax.jit(trainer.outer_sync)
-    for t in range(steps):
-        state, _ = inner(state, data.global_batch(t, trainer.M, batch_tokens // 128 // trainer.M))
-        if algo == "diloco" and (t + 1) % h == 0:
-            state = outer(state)
-    if algo == "diloco":
-        state = outer(state)
+    # superstep engine: one compiled round per dispatch (state is donated)
+    engine = SuperstepEngine(trainer, data, batch_tokens // 128 // trainer.M)
+    state, _ = engine.run(state, steps)
+    if algo == "diloco" and steps % h != 0:
+        state = trainer.jit_outer_sync()(state)  # sync the partial tail round
     evals = [float(trainer.eval_step(state, data.batch(10_000 + i, 0, 1, 16, eval=True)))
              for i in range(6)]
     return float(np.mean(evals))

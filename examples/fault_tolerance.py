@@ -26,7 +26,8 @@ trainer = make_trainer(
     TrainConfig(global_batch_tokens=4096, seq_len=128, steps=40),
 )
 data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=128)
-inner, outer = jax.jit(trainer.inner_step), jax.jit(trainer.outer_sync)
+# donated entry points: each call consumes its state argument in place
+inner, outer = trainer.jit_inner_step(), trainer.jit_outer_sync()
 
 with tempfile.TemporaryDirectory() as tmp:
     ck = Checkpointer(tmp, keep=2)
@@ -63,7 +64,7 @@ with tempfile.TemporaryDirectory() as tmp:
         OptimizerConfig(peak_lr=3e-3, warmup_steps=10),
         TrainConfig(global_batch_tokens=4096, seq_len=128, steps=40),
     )
-    inner2 = jax.jit(trainer2.inner_step)
+    inner2 = trainer2.jit_inner_step()
     for t in range(15, 20):
         state2, m = inner2(state2, data.global_batch(t, 2, 4))
     state2 = trainer2.outer_sync(state2)

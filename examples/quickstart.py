@@ -6,6 +6,7 @@ import jax
 
 from repro.configs import DiLoCoConfig, OptimizerConfig, TrainConfig, get_config
 from repro.core.diloco import make_trainer
+from repro.core.superstep import SuperstepEngine
 from repro.data import SyntheticLM
 from repro.models import build_model
 
@@ -27,17 +28,17 @@ trainer = make_trainer(
 # 3. data: each replica m reads its own shard D_m (Algorithm 1 line 4)
 data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=128)
 
-# 4. train: inner steps every step, outer sync every H
+# 4. train with the superstep engine: each call runs a whole outer round
+#    (H inner steps + the outer sync — the ONLY cross-replica communication)
+#    as ONE compiled executable, with batches generated on device and the
+#    host syncing once per round.  NB the state argument is donated
+#    (updated in place): always rebind it, never reuse the old reference.
 state = trainer.init_state(jax.random.PRNGKey(0))
-inner = jax.jit(trainer.inner_step)
-outer = jax.jit(trainer.outer_sync)
-for step in range(100):
-    batch = data.global_batch(step, trainer.M, batch_seqs_per_replica=2)
-    state, metrics = inner(state, batch)
-    if (step + 1) % trainer.dcfg.sync_every == 0:
-        state = outer(state)  # the ONLY cross-replica communication
-    if (step + 1) % 20 == 0:
-        print(f"step {step+1}: loss={float(metrics['loss']):.4f}")
+engine = SuperstepEngine(trainer, data, batch_seqs=2)
+for rnd in range(10):  # 100 steps = 10 rounds of H=10
+    state, metrics = engine.run_round(state, start=rnd * 10)
+    if (rnd + 1) % 2 == 0:
+        print(f"step {(rnd+1) * 10}: loss={metrics['loss'][-1]:.4f}")
 
 # 5. evaluate the global model (paper §2.2)
 eval_nll = trainer.eval_step(state, data.batch(10_000, 0, 1, 8, eval=True))

@@ -185,6 +185,18 @@ class DiLoCoConfig:
     streaming_fragments: int = 0     # >0 -> Streaming DiLoCo with P fragments
     error_feedback: bool = True      # residual accumulation for compressed sync
 
+    def __post_init__(self):
+        if self.streaming_fragments < 0:
+            raise ValueError(f"streaming_fragments must be >= 0, got {self.streaming_fragments}")
+        if self.streaming_fragments > self.sync_every:
+            # stride = max(H // P, 1) clamps to 1 and fragments collide on the
+            # same step instead of spreading uniformly over the round
+            raise ValueError(
+                f"streaming_fragments ({self.streaming_fragments}) must be <= "
+                f"sync_every ({self.sync_every}): with P > H the fragment "
+                "stride degenerates to 1 and fragment syncs collide"
+            )
+
 
 @dataclass(frozen=True)
 class OptimizerConfig:

@@ -43,6 +43,28 @@ class DiLoCo:
     dcfg: DiLoCoConfig
     ocfg: OptimizerConfig
     tcfg: TrainConfig
+    _jit_cache: dict = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False
+    )
+
+    # ---- compiled entry points -------------------------------------------
+    # State-carrying hot-path executables donate their state argument so the
+    # update is in-place (XLA aliases the buffers).  Callers must treat the
+    # passed-in state as CONSUMED: rebind `state = fn(state, ...)` and never
+    # touch the old reference again.
+    def jit_inner_step(self, donate: bool = True):
+        return self._jitted("inner_step", self.inner_step, donate)
+
+    def jit_outer_sync(self, donate: bool = True):
+        return self._jitted("outer_sync", self.outer_sync, donate)
+
+    def _jitted(self, name: str, fn, donate: bool):
+        key = (name, donate)
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(
+                fn, donate_argnums=(0,) if donate else ()
+            )
+        return self._jit_cache[key]
 
     # ------------------------------------------------------------------
     @property
@@ -223,22 +245,41 @@ class DiLoCo:
         gparams = state["global_params"]
         inner = state["inner_params"]
 
-        # Δ_m = θ_global - θ_m   (leading M axis)
-        delta_m = jax.tree.map(
-            lambda g, p: g[None].astype(jnp.float32) - p.astype(jnp.float32), gparams, inner
-        )
+        w = None
+        if weights is not None:
+            w = weights / jnp.maximum(weights.sum(), 1e-9)
 
         new_ef = None
         if self.dcfg.compression == "int8":
-            ef = state.get("ef")
-            delta_m, new_ef = compression.compress_tree(delta_m, ef)
-
-        if weights is None:
-            delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), delta_m)
-        else:
-            w = weights / jnp.maximum(weights.sum(), 1e-9)
+            # per-replica Δ_m stacks are inherent here: each replica quantizes
+            # (and keeps error feedback for) its own transmission
+            delta_m = jax.tree.map(
+                lambda g, p: g[None].astype(jnp.float32) - p.astype(jnp.float32),
+                gparams, inner,
+            )
+            delta_m, new_ef = compression.compress_tree(delta_m, state.get("ef"))
+            if w is None:
+                delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), delta_m)
+            else:
+                delta = jax.tree.map(
+                    lambda d: jnp.tensordot(w, d.astype(jnp.float32), axes=1), delta_m
+                )
+        elif w is None:
+            # mean_m(θ_g - θ_m) = θ_g - mean_m(θ_m): the replica mean folds
+            # into one fp32-accumulated reduction — the (M, ...) fp32 delta
+            # stack is never materialized, so peak memory does not scale
+            # with M in fp32
             delta = jax.tree.map(
-                lambda d: jnp.tensordot(w, d.astype(jnp.float32), axes=1), delta_m
+                lambda g, p: g.astype(jnp.float32)
+                - jnp.mean(p, axis=0, dtype=jnp.float32),
+                gparams, inner,
+            )
+        else:
+            # Σ_m w_m (θ_g - θ_m) = θ_g - Σ_m w_m θ_m for normalized w
+            delta = jax.tree.map(
+                lambda g, p: g.astype(jnp.float32)
+                - jnp.einsum("m,m...->...", w, p, preferred_element_type=jnp.float32),
+                gparams, inner,
             )
 
         new_global, new_mom = outer_opt.outer_step(

@@ -5,10 +5,20 @@ at offset p*(H/P), so *some* fragment syncs every H/P steps.  Total bytes
 are unchanged (paper Appendix A notes this) but peak per-step communication
 drops by P and the sync can overlap inner compute.  Fragments keep their own
 slice of the outer momentum; the global model is updated fragment-wise.
+
+Hot-path design: the leaf->fragment partition is STATIC — computed once from
+the abstract parameter tree — and each fragment's sync is a cached jitted
+executable (``FragmentSync.jitted``) with donated state buffers, so the
+per-step loop pays no Python tree-flatten and no retrace after the first
+call.  The un-jitted ``FragmentSync.apply`` is traceable: the compiled
+superstep engine (``repro.core.superstep``) embeds it behind ``lax.cond`` so
+a whole outer round — inner steps plus mid-round fragment syncs — is ONE
+executable.
 """
 from __future__ import annotations
 
-from typing import List
+from functools import partial
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -22,50 +32,106 @@ def fragment_assignment(params, num_fragments: int) -> List[int]:
     return [i % num_fragments for i in range(n)]
 
 
+def fragment_stride(num_fragments: int, sync_every: int) -> int:
+    return max(sync_every // num_fragments, 1)
+
+
+def is_due(step, fragment: int, num_fragments: int, sync_every: int):
+    """Whether ``fragment`` syncs at (1-based) ``step``.
+
+    ``step`` may be a traced int32 scalar — this is the predicate the
+    compiled superstep evaluates on-device inside its scan body.
+    """
+    stride = fragment_stride(num_fragments, sync_every)
+    return (step - fragment * stride) % sync_every == 0
+
+
 def fragments_due(step: int, num_fragments: int, sync_every: int) -> List[int]:
     """Which fragments sync at `step` (1-based step count, like step%H==0)."""
     if num_fragments <= 0:
         return []
-    stride = max(sync_every // num_fragments, 1)
-    due = []
-    for p in range(num_fragments):
-        if (step - p * stride) % sync_every == 0:
-            due.append(p)
-    return due
+    return [
+        p for p in range(num_fragments)
+        if bool(is_due(step, p, num_fragments, sync_every))
+    ]
+
+
+class FragmentSync:
+    """Fragment-wise outer sync with a precomputed static partition.
+
+    One instance per trainer; ``jitted(p)`` returns a cached, compiled
+    executable for fragment ``p`` (state buffers donated when ``donate``),
+    and ``apply`` is the traceable body shared with the superstep engine.
+    """
+
+    def __init__(self, trainer, *, donate: bool = True):
+        dcfg = trainer.dcfg
+        assert not dcfg.data_parallel
+        assert dcfg.streaming_fragments > 0
+        self.trainer = trainer
+        self.num_fragments = dcfg.streaming_fragments
+        self.assignment = fragment_assignment(
+            trainer.model.abstract_params(jnp.float32), self.num_fragments
+        )
+        self._donate = donate
+        self._jitted: Dict[int, object] = {}
+
+    def apply(self, state: dict, fragment: int) -> dict:
+        """Outer sync restricted to one fragment's leaves (traceable; the
+        Python flatten below runs once per trace, never per call)."""
+        dcfg = self.trainer.dcfg
+        gleaves, treedef = jax.tree.flatten(state["global_params"])
+        ileaves = jax.tree.leaves(state["inner_params"])
+        mleaves = jax.tree.leaves(state["outer_m"])
+
+        new_g, new_i, new_m = [], [], []
+        for idx, (g, p, m) in enumerate(zip(gleaves, ileaves, mleaves)):
+            if self.assignment[idx] != fragment:
+                new_g.append(g)
+                new_i.append(p)
+                new_m.append(m)
+                continue
+            # replica mean folded into the reduction — no (M, ...) fp32 stack
+            delta = g.astype(jnp.float32) - jnp.mean(p, axis=0, dtype=jnp.float32)
+            (g2,), (m2,) = outer_opt.outer_step(
+                (g,), (delta,), (m,),
+                lr=dcfg.outer_lr, mu=dcfg.outer_momentum, nesterov=dcfg.nesterov,
+            )
+            new_g.append(g2)
+            new_m.append(m2)
+            new_i.append(jnp.broadcast_to(g2[None].astype(p.dtype), p.shape))
+
+        return {
+            **state,
+            "global_params": jax.tree.unflatten(treedef, new_g),
+            "inner_params": jax.tree.unflatten(treedef, new_i),
+            "outer_m": jax.tree.unflatten(treedef, new_m),
+        }
+
+    def jitted(self, fragment: int):
+        fn = self._jitted.get(fragment)
+        if fn is None:
+            fn = jax.jit(
+                partial(self.apply, fragment=fragment),
+                donate_argnums=(0,) if self._donate else (),
+            )
+            self._jitted[fragment] = fn
+        return fn
+
+
+def _cached_sync(trainer) -> FragmentSync:
+    sync = getattr(trainer, "_fragment_sync", None)
+    if sync is None or sync.num_fragments != trainer.dcfg.streaming_fragments:
+        # no donation in the convenience path: callers may hold other
+        # references to the state they pass in
+        sync = FragmentSync(trainer, donate=False)
+        trainer._fragment_sync = sync
+    return sync
 
 
 def outer_sync_fragment(trainer, state: dict, fragment: int) -> dict:
-    """Outer sync restricted to one fragment's leaves."""
-    dcfg = trainer.dcfg
-    assert not dcfg.data_parallel
-    assign = fragment_assignment(state["global_params"], dcfg.streaming_fragments)
-
-    gleaves, treedef = jax.tree.flatten(state["global_params"])
-    ileaves = jax.tree.leaves(state["inner_params"])
-    mleaves = jax.tree.leaves(state["outer_m"])
-
-    new_g, new_i, new_m = [], [], []
-    for idx, (g, p, m) in enumerate(zip(gleaves, ileaves, mleaves)):
-        if assign[idx] != fragment:
-            new_g.append(g)
-            new_i.append(p)
-            new_m.append(m)
-            continue
-        delta = jnp.mean(g[None].astype(jnp.float32) - p.astype(jnp.float32), axis=0)
-        (g2,), (m2,) = outer_opt.outer_step(
-            (g,), (delta,), (m,),
-            lr=dcfg.outer_lr, mu=dcfg.outer_momentum, nesterov=dcfg.nesterov,
-        )
-        new_g.append(g2)
-        new_m.append(m2)
-        new_i.append(jnp.broadcast_to(g2[None].astype(p.dtype), p.shape))
-
-    return {
-        **state,
-        "global_params": jax.tree.unflatten(treedef, new_g),
-        "inner_params": jax.tree.unflatten(treedef, new_i),
-        "outer_m": jax.tree.unflatten(treedef, new_m),
-    }
+    """Outer sync restricted to one fragment's leaves (cached compiled)."""
+    return _cached_sync(trainer).jitted(fragment)(state)
 
 
 def streaming_train_step(trainer, state: dict, batch: dict):

@@ -1,0 +1,285 @@
+"""Compiled H-step superstep engine: one executable per outer round.
+
+The paper's wall-clock argument (and the ROADMAP's "fast as the hardware
+allows" north star) makes the inner loop the hot path: DiLoCo syncs every H
+steps precisely so that the other H-1 steps run at hardware speed.  A
+per-step Python loop gives that speed back — one dispatch per inner step, a
+host-built batch per step, a full state copy per call (no donation), and a
+blocking ``float(metrics["loss"])`` host sync per step.
+
+``SuperstepEngine`` removes all of it.  One jitted, donated executable runs
+an entire outer round:
+
+* ``lax.scan`` over the H inner steps;
+* on-device batch generation — for ``SyntheticLM`` the step counter is
+  folded into the PRNG key *inside* the scan body (bitwise-identical
+  batches to the host path, zero host->device traffic); file-backed
+  sources get a double-buffered ``device_put`` prefetcher instead;
+* the outer sync in the same executable — full, int8-compressed (error
+  feedback carried in the donated state), or fragment-wise streaming
+  (``lax.cond`` on the static fragment schedule inside the scan body, so
+  mid-round fragment syncs land on exactly the step the per-step loop
+  would run them);
+* stacked ``(H, ...)`` metrics returned to the host — ONE host sync per
+  outer round instead of one per step.
+
+Donation caveat: the state passed to ``run_round``/``run`` is CONSUMED
+(XLA aliases its buffers for the update).  Rebind ``state = engine.run_*``
+and never touch the old reference.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import streaming
+from repro.data import SyntheticLM
+
+
+def device_batch_fn(data: SyntheticLM, num_replicas: int, batch_seqs: int) -> Callable:
+    """Traceable ``step -> global batch``, bitwise-equal to
+    ``data.global_batch(step, num_replicas, batch_seqs)``.
+
+    The step counter (a traced int32 inside the superstep's scan) is folded
+    into the PRNG key exactly as the host path folds the Python int, and the
+    per-replica generator runs under ``vmap`` — so batches are generated on
+    device, inside the compiled round, with no host involvement.
+    """
+    M = num_replicas
+
+    def batch_at(step: jax.Array) -> dict:
+        key = jax.random.fold_in(data._root, step)
+
+        def one(m):
+            k = jax.random.fold_in(key, m + M * 7919)
+            return data._gen(k, batch_seqs)
+
+        toks = jax.vmap(one)(jnp.arange(M))  # (M, b, L+1)
+        return {
+            "tokens": toks[..., :-1].astype(jnp.int32),
+            "labels": toks[..., 1:].astype(jnp.int32),
+        }
+
+    return batch_at
+
+
+class RoundPrefetcher:
+    """Double-buffered host->device batch pipeline for file-backed sources.
+
+    While round r executes on device, a worker thread assembles round r+1's
+    stacked ``(H, M, b, L)`` batch and ``device_put``s it, so in steady
+    state the engine never blocks on host-side batch assembly or transfer.
+    """
+
+    def __init__(self, data: Any, num_replicas: int, batch_seqs: int):
+        self._data = data
+        self._m = num_replicas
+        self._bs = batch_seqs
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        self._pending: Dict[Tuple[int, int], concurrent.futures.Future] = {}
+
+    def _build(self, start: int, length: int):
+        rounds = [
+            self._data.global_batch(start + i, self._m, self._bs)
+            for i in range(length)
+        ]
+        stacked = jax.tree.map(
+            lambda *xs: np.stack([np.asarray(x) for x in xs]), *rounds
+        )
+        return jax.device_put(stacked)
+
+    def schedule(self, start: int, length: int) -> None:
+        key = (start, length)
+        if key not in self._pending:
+            self._pending[key] = self._pool.submit(self._build, start, length)
+
+    def get(self, start: int, length: int, next_length: Optional[int] = None):
+        """Return the (start, length) round; prefetch the following round of
+        ``next_length`` steps (default: same length; 0 = end of training,
+        prefetch nothing).  Mis-predicted pending rounds are discarded so
+        stale batches don't pin device memory."""
+        fut = self._pending.pop((start, length), None)
+        for stale in list(self._pending):
+            self._pending.pop(stale).cancel()
+        xs = fut.result() if fut is not None else self._build(start, length)
+        next_length = length if next_length is None else next_length
+        if next_length > 0:
+            self.schedule(start + length, next_length)
+        return xs
+
+    def close(self) -> None:
+        """Drop any pending readahead and stop the worker.  Call after the
+        last round when driving ``run_round`` directly without the
+        ``next_length=0`` end hint, so the final speculative batch doesn't
+        stay pinned on device for the engine's lifetime."""
+        for key in list(self._pending):
+            self._pending.pop(key).cancel()
+        self._pool.shutdown(wait=False)
+
+
+class SuperstepEngine:
+    """Runs training one compiled, donated outer round per dispatch.
+
+    ``chunk`` (default ``dcfg.sync_every``) is the scan length; rounds that
+    end on an H boundary include the outer sync in the same executable.
+    """
+
+    def __init__(
+        self,
+        trainer,
+        data,
+        batch_seqs: int,
+        *,
+        chunk: int = 0,
+        donate: bool = True,
+        device_datagen: Optional[bool] = None,
+        unroll: int = 1,
+    ):
+        dcfg = trainer.dcfg
+        if dcfg.streaming_fragments > 0 and dcfg.compression != "none":
+            raise ValueError("streaming fragments do not support compression")
+        if chunk and not dcfg.data_parallel and chunk != dcfg.sync_every:
+            raise ValueError(
+                f"chunk ({chunk}) must equal sync_every ({dcfg.sync_every}) "
+                "for DiLoCo; a free chunk length is only meaningful for DP"
+            )
+        self.trainer = trainer
+        self.data = data
+        self.batch_seqs = batch_seqs
+        self.chunk = chunk or dcfg.sync_every
+        self.donate = donate
+        # scan unroll factor: >1 trades compile time (and code size) for
+        # fewer while-loop carry round-trips; worthwhile for tiny models
+        self.unroll = unroll
+        if device_datagen is None:
+            device_datagen = isinstance(data, SyntheticLM)
+        self._on_device_data = device_datagen
+        self._batch_at = (
+            device_batch_fn(data, trainer.M, batch_seqs) if device_datagen else None
+        )
+        self._prefetch = (
+            None if device_datagen else RoundPrefetcher(data, trainer.M, batch_seqs)
+        )
+        self._frag = (
+            streaming.FragmentSync(trainer)
+            if (dcfg.streaming_fragments > 0 and not dcfg.data_parallel)
+            else None
+        )
+        self._rounds: Dict[Tuple[int, bool], Any] = {}
+
+    # ---- compiled round -------------------------------------------------
+    def _round_fn(self, length: int, do_sync: bool):
+        key = (length, do_sync)
+        fn = self._rounds.get(key)
+        if fn is None:
+            fn = jax.jit(
+                self._make_round(length, do_sync),
+                donate_argnums=(0,) if self.donate else (),
+            )
+            self._rounds[key] = fn
+        return fn
+
+    def _make_round(self, length: int, do_sync: bool):
+        tr = self.trainer
+        H = tr.dcfg.sync_every
+        P = tr.dcfg.streaming_fragments
+
+        def round_fn(state, xs, weights):
+            def body(st, x):
+                batch = self._batch_at(st["step"]) if self._on_device_data else x
+                st, metrics = tr.inner_step(st, batch)
+                if self._frag is not None:
+                    # mid-round fragment syncs at their scheduled steps
+                    # (st["step"] is post-increment, i.e. 1-based like the
+                    # per-step loop's `step + 1`)
+                    for p in range(P):
+                        st = jax.lax.cond(
+                            streaming.is_due(st["step"], p, P, H),
+                            lambda s, p=p: self._frag.apply(s, p),
+                            lambda s: s,
+                            st,
+                        )
+                return st, metrics
+
+            state, metrics = jax.lax.scan(
+                body, state, xs, length=length,
+                unroll=min(self.unroll, length),
+            )
+            if do_sync and self._frag is None and not tr.dcfg.data_parallel:
+                state = tr.outer_sync(state, weights)
+            return state, metrics
+
+        return round_fn
+
+    # ---- driving --------------------------------------------------------
+    def run_round(self, state, start: int, length: Optional[int] = None, weights=None,
+                  next_length: Optional[int] = None):
+        """Run ``length`` inner steps from global step ``start`` (plus the
+        outer sync if the round ends on an H boundary) as one executable.
+
+        Returns ``(state, metrics)`` where metrics is a dict of host numpy
+        arrays of shape ``(length,)`` — the single host sync of the round.
+        CONSUMES ``state`` (buffer donation).  ``next_length`` is a prefetch
+        hint for file-backed data (0 = last round, don't prefetch); direct
+        drivers that omit it should call ``engine.close()`` after the final
+        round to release the speculative readahead.
+        """
+        length = self.chunk if length is None else length
+        end = start + length
+        dcfg = self.trainer.dcfg
+        if not dcfg.data_parallel and self._frag is None:
+            # a window crossing an interior H boundary would silently skip
+            # that boundary's outer sync (the executable syncs only at its
+            # end); run() splits windows so this can't happen
+            boundary = (start // self.chunk + 1) * self.chunk
+            if end > boundary:
+                raise ValueError(
+                    f"round [{start}, {end}) crosses the outer-sync boundary "
+                    f"at step {boundary}; split windows at multiples of "
+                    f"sync_every={self.chunk} (engine.run does this)"
+                )
+        do_sync = (end % self.chunk == 0) and not dcfg.data_parallel
+        xs = None
+        if not self._on_device_data:
+            xs = self._prefetch.get(start, length, next_length)
+        state, metrics = self._round_fn(length, do_sync)(state, xs, weights)
+        return state, jax.device_get(metrics)
+
+    def round_bounds(self, step: int, steps: int) -> Tuple[int, int]:
+        """Round schedule when driving ``step -> steps``: returns ``(end,
+        next_length)`` — the current round's end (split at chunk boundaries)
+        and the following round's length (the prefetch hint; 0 at the end).
+        External drivers (the train loop) use this so the alignment
+        invariants live in one place."""
+        end = min(steps, (step // self.chunk + 1) * self.chunk)
+        nxt = min(steps, (end // self.chunk + 1) * self.chunk) - end
+        return end, nxt
+
+    def run(self, state, steps: int, start: int = 0):
+        """Drive ``start..steps`` in H-aligned rounds (tail round compiled
+        once at its shorter length).  Returns ``(state, metrics)`` with
+        metrics concatenated to ``(steps - start,)`` host arrays."""
+        collected = []
+        step = start
+        while step < steps:
+            end, nxt = self.round_bounds(step, steps)
+            state, m = self.run_round(state, step, end - step, next_length=nxt)
+            collected.append(m)
+            step = end
+        if not collected:
+            return state, {}
+        metrics = {
+            k: np.concatenate([np.atleast_1d(m[k]) for m in collected])
+            for k in collected[0]
+        }
+        return state, metrics
+
+    def close(self) -> None:
+        """Release the data prefetcher's pending readahead (no-op for
+        on-device generation)."""
+        if self._prefetch is not None:
+            self._prefetch.close()

@@ -89,20 +89,32 @@ class SyntheticLM:
 
 @dataclasses.dataclass
 class TokenFileSource:
-    """Memory-mapped uint16/uint32 token file, chunked into sequences."""
+    """Memory-mapped uint16/uint32 token file, chunked into sequences.
+
+    The trailing ``eval_frac`` of sequences is held out: ``eval=True``
+    batches draw only from that tail, training batches only from the head,
+    so reported eval numbers measure generalization, not memorization.
+    """
 
     path: str
     seq_len: int
     dtype: str = "uint16"
+    eval_frac: float = 0.05
 
     def __post_init__(self):
         self._data = np.memmap(self.path, dtype=self.dtype, mode="r")
-        self._n_seqs = (len(self._data) - 1) // self.seq_len
+        n = (len(self._data) - 1) // self.seq_len
+        n_eval = min(max(int(n * self.eval_frac), 1), n - 1) if n > 1 else 0
+        self._n_seqs = n - n_eval      # training pool (head of the file)
+        self._n_eval = n_eval          # held-out pool (tail of the file)
 
     def batch(self, step: int, replica: int, num_replicas: int, batch_seqs: int, *, eval: bool = False) -> dict:
         # replica-strided disjoint shards; deterministic in (step, replica)
         base = (step * num_replicas + replica) * batch_seqs
-        idx = (base + np.arange(batch_seqs)) % self._n_seqs
+        if eval and self._n_eval > 0:
+            idx = self._n_seqs + (base + np.arange(batch_seqs)) % self._n_eval
+        else:
+            idx = (base + np.arange(batch_seqs)) % self._n_seqs
         starts = idx * self.seq_len
         toks = np.stack([self._data[s : s + self.seq_len + 1] for s in starts]).astype(np.int32)
         return {

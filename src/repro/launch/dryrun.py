@@ -179,7 +179,7 @@ def run_cell(
         "rules": {k: str(v) for k, v in rules.items()},
     }
 
-    with jax.set_mesh(mesh), sharding.use_rules(rules):
+    with sharding.set_mesh(mesh), sharding.use_rules(rules):
         # ---- deliverable compile (production config) ---------------------
         deliver_cfg = cfg if shape.kind != "decode" else cfg.replace(scan_layers=False)
         t0 = time.time()

@@ -14,21 +14,24 @@ import jax
 from repro.sharding import DEFAULT_RULES
 
 
+def _make_mesh(shape, axes):
+    # axis_types landed after jax 0.4.x; Auto is the default there anyway
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(replica: int = 1, data: int = 1, model: int = 1):
     """Small explicit (replica, data, model) mesh for tests/examples."""
-    return jax.make_mesh(
-        (replica, data, model),
-        ("replica", "data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 3,
-    )
+    return _make_mesh((replica, data, model), ("replica", "data", "model"))
 
 
 # ---------------------------------------------------------------------------

@@ -5,6 +5,16 @@ Runs Data-Parallel or DiLoCo training of any registered architecture on a
 held-out stream, straggler simulation, and optional int8 outer compression /
 streaming fragment sync.
 
+Two execution engines (``--engine``):
+
+* ``superstep`` (default) — one compiled, donated executable per outer
+  round: ``lax.scan`` over the H inner steps with on-device batch
+  generation, the outer sync fused in, and ONE host sync per round
+  (``repro.core.superstep``).  Eval/checkpoint cadences are rounded to
+  outer-round boundaries.
+* ``per-step`` — the classic one-dispatch-per-inner-step loop (kept for
+  debugging and as the perf baseline; see ``benchmarks/bench_engine.py``).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch tiny-t1 --algorithm diloco \
       --replicas 4 --sync-every 30 --steps 200 --batch-tokens 8192
@@ -17,7 +27,6 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import sharding
@@ -25,7 +34,8 @@ from repro.checkpoint import Checkpointer
 from repro.configs import DiLoCoConfig, OptimizerConfig, TrainConfig, get_config
 from repro.core import elastic, streaming
 from repro.core.diloco import make_trainer
-from repro.data import SyntheticLM
+from repro.core.superstep import SuperstepEngine
+from repro.data import SyntheticLM, TokenFileSource
 from repro.launch.mesh import make_mesh
 from repro.models import build_model
 
@@ -34,6 +44,9 @@ def build_argparser():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tiny-t1")
     ap.add_argument("--algorithm", choices=["dp", "diloco"], default="diloco")
+    ap.add_argument("--engine", choices=["superstep", "per-step"], default="superstep",
+                    help="superstep: one compiled executable per outer round; "
+                         "per-step: one dispatch per inner step")
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--sync-every", type=int, default=30)
     ap.add_argument("--outer-lr", type=float, default=0.7)
@@ -48,6 +61,9 @@ def build_argparser():
     ap.add_argument("--mesh", default="1,1,1", help="replica,data,model")
     ap.add_argument("--compression", choices=["none", "int8"], default="none")
     ap.add_argument("--streaming-fragments", type=int, default=0)
+    ap.add_argument("--tokens-file", default="",
+                    help="binary token file -> TokenFileSource (prefetched "
+                         "host batches instead of on-device synthetic data)")
     ap.add_argument("--eval-every", type=int, default=50)
     ap.add_argument("--eval-batches", type=int, default=4)
     ap.add_argument("--checkpoint-dir", default="")
@@ -80,8 +96,26 @@ def make_run(args):
     )
     ocfg = OptimizerConfig(peak_lr=args.lr, warmup_steps=args.warmup)
     trainer = make_trainer(model, dcfg, ocfg, tcfg)
-    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq_len, seed=args.seed + 1)
+    if getattr(args, "tokens_file", ""):
+        data = TokenFileSource(args.tokens_file, seq_len=args.seq_len)
+    else:
+        data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq_len, seed=args.seed + 1)
     return cfg, trainer, data, steps
+
+
+def _straggler_weights(args, rng, m):
+    mask = rng.random(m) >= args.straggler_rate
+    if not mask.any():
+        mask[rng.integers(m)] = True
+    return elastic.participation_weights(mask)
+
+
+def _eval_record(args, data, state, eval_step, seqs_per_replica):
+    evals = [
+        float(eval_step(state, data.batch(10_000 + i, 0, 1, seqs_per_replica, eval=True)))
+        for i in range(args.eval_batches)
+    ]
+    return float(np.mean(evals))
 
 
 def train_loop(args, trainer, data, steps, *, mesh=None, rules=None, quiet=False):
@@ -96,8 +130,76 @@ def train_loop(args, trainer, data, steps, *, mesh=None, rules=None, quiet=False
         if not quiet:
             print(f"resumed from step {start}")
 
-    inner = jax.jit(trainer.inner_step)
-    outer = jax.jit(trainer.outer_sync)
+    if args.straggler_rate > 0 and trainer.dcfg.streaming_fragments > 0 and not quiet:
+        print("warning: --straggler-rate has no effect with streaming "
+              "fragments (fragment syncs always average all replicas)")
+
+    if getattr(args, "engine", "superstep") == "superstep":
+        loop = _superstep_loop
+    else:
+        loop = _per_step_loop
+    state, history = loop(
+        args, trainer, data, steps, state, start, ckpt,
+        seqs_per_replica=seqs_per_replica, quiet=quiet,
+    )
+    if ckpt:
+        ckpt.wait()
+        ckpt.save(state, steps)
+    return state, history
+
+
+def _superstep_loop(args, trainer, data, steps, state, start, ckpt, *,
+                    seqs_per_replica, quiet):
+    """One compiled round per dispatch; host syncs once per round.
+
+    Eval and checkpoint cadences fire at the end of the round in which they
+    come due (the engine never breaks a round open mid-scan).
+    """
+    engine = SuperstepEngine(trainer, data, seqs_per_replica)
+    eval_step = jax.jit(trainer.eval_step)
+    rng = np.random.default_rng(args.seed + 99)
+    m = trainer.M
+    H = engine.chunk
+    history = []
+    t0 = time.time()
+    step = start
+    while step < steps:
+        end, nxt = engine.round_bounds(step, steps)
+        weights = None
+        if (args.straggler_rate > 0 and m > 1 and not trainer.dcfg.data_parallel
+                and trainer.dcfg.streaming_fragments == 0 and end % H == 0):
+            weights = _straggler_weights(args, rng, m)
+        state, mets = engine.run_round(state, step, end - step, weights=weights,
+                                       next_length=nxt)
+        losses = np.atleast_1d(np.asarray(mets["loss"]))
+        for i in range(end - step):
+            history.append({"step": step + i + 1, "loss": float(losses[i])})
+        window = range(step + 1, end + 1)
+        eval_due = args.eval_every and any(s % args.eval_every == 0 for s in window)
+        if eval_due or end == steps:
+            history[-1]["eval_nll"] = _eval_record(
+                args, data, state, eval_step, seqs_per_replica)
+        log_due = args.log_every and any(s % args.log_every == 0 for s in window)
+        if not quiet and (log_due or end == steps):
+            e = (f" eval={history[-1]['eval_nll']:.4f}"
+                 if "eval_nll" in history[-1] else "")
+            print(f"step {end}/{steps} loss={history[-1]['loss']:.4f}{e} "
+                  f"({(time.time()-t0)/(end-start):.3f}s/step)", flush=True)
+        if ckpt and args.checkpoint_every and any(
+                s % args.checkpoint_every == 0 for s in window):
+            ckpt.save_async(state, end)
+        step = end
+    return state, history
+
+
+def _per_step_loop(args, trainer, data, steps, state, start, ckpt, *,
+                   seqs_per_replica, quiet):
+    m = trainer.M
+    inner = trainer.jit_inner_step()
+    outer = trainer.jit_outer_sync()
+    frag = (streaming.FragmentSync(trainer)
+            if trainer.dcfg.streaming_fragments > 0 and not trainer.dcfg.data_parallel
+            else None)
     eval_step = jax.jit(trainer.eval_step)
     rng = np.random.default_rng(args.seed + 99)
     history = []
@@ -106,36 +208,27 @@ def train_loop(args, trainer, data, steps, *, mesh=None, rules=None, quiet=False
         batch = data.global_batch(step, m, seqs_per_replica)
         state, metrics = inner(state, batch)
         if not trainer.dcfg.data_parallel:
-            if trainer.dcfg.streaming_fragments > 0:
-                for frag in streaming.fragments_due(
+            if frag is not None:
+                for p in streaming.fragments_due(
                     step + 1, trainer.dcfg.streaming_fragments, trainer.dcfg.sync_every
                 ):
-                    state = streaming.outer_sync_fragment(trainer, state, frag)
+                    state = frag.jitted(p)(state)
             elif (step + 1) % trainer.dcfg.sync_every == 0:
                 weights = None
                 if args.straggler_rate > 0 and m > 1:
-                    mask = rng.random(m) >= args.straggler_rate
-                    if not mask.any():
-                        mask[rng.integers(m)] = True
-                    weights = elastic.participation_weights(mask)
+                    weights = _straggler_weights(args, rng, m)
                 state = outer(state, weights)
         rec = {"step": step + 1, "loss": float(metrics["loss"])}
         if args.eval_every and (step + 1) % args.eval_every == 0 or step == steps - 1:
-            evals = [
-                float(eval_step(state, data.batch(10_000 + i, 0, 1, seqs_per_replica, eval=True)))
-                for i in range(args.eval_batches)
-            ]
-            rec["eval_nll"] = float(np.mean(evals))
+            rec["eval_nll"] = _eval_record(
+                args, data, state, eval_step, seqs_per_replica)
         history.append(rec)
-        if not quiet and (step + 1) % args.log_every == 0:
+        if not quiet and args.log_every and (step + 1) % args.log_every == 0:
             e = f" eval={rec.get('eval_nll', float('nan')):.4f}" if "eval_nll" in rec else ""
             print(f"step {step+1}/{steps} loss={rec['loss']:.4f}{e} "
                   f"({(time.time()-t0)/(step-start+1):.2f}s/step)", flush=True)
         if ckpt and args.checkpoint_every and (step + 1) % args.checkpoint_every == 0:
             ckpt.save_async(state, step + 1)
-    if ckpt:
-        ckpt.wait()
-        ckpt.save(state, steps)
     return state, history
 
 
@@ -144,16 +237,18 @@ def main():
     cfg, trainer, data, steps = make_run(args)
     r, d, mdl = (int(x) for x in args.mesh.split(","))
     print(f"arch={cfg.name} N={build_model(cfg).param_count()/1e6:.2f}M params "
-          f"algo={args.algorithm} M={trainer.M} H={args.sync_every} steps={steps}")
+          f"algo={args.algorithm} M={trainer.M} H={args.sync_every} steps={steps} "
+          f"engine={args.engine}")
     if r * d * mdl > 1:
         mesh = make_mesh(r, d, mdl)
-        with jax.set_mesh(mesh), sharding.use_rules(dict(sharding.DEFAULT_RULES)):
+        with sharding.set_mesh(mesh), sharding.use_rules(dict(sharding.DEFAULT_RULES)):
             state, history = train_loop(args, trainer, data, steps, mesh=mesh)
     else:
         state, history = train_loop(args, trainer, data, steps)
     final = history[-1]
+    floor = data.entropy_floor() if hasattr(data, "entropy_floor") else float("nan")
     print(f"final: loss={final['loss']:.4f} eval_nll={final.get('eval_nll', float('nan')):.4f} "
-          f"(source entropy floor ~{data.entropy_floor():.4f})")
+          f"(source entropy floor ~{floor:.4f})")
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(history, f)

@@ -42,6 +42,31 @@ DEFAULT_RULES = {
 }
 
 
+def set_mesh(mesh):
+    """Version-portable ``jax.set_mesh``: context manager activating ``mesh``.
+
+    Newer jax exposes ``jax.set_mesh``; on older versions the Mesh object is
+    itself the context manager that binds the ambient mesh.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def tree_named(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree.
+
+    ``jax.jit``'s in/out_shardings require concrete Shardings (bare
+    PartitionSpecs are only accepted on newer jax with an ambient mesh).
+    """
+    from jax.sharding import NamedSharding
+
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
 def current_rules() -> dict:
     r = _RULES.get()
     return r if r else {}

@@ -31,13 +31,16 @@ def test_sharded_train_step_runs_on_mesh():
     cfg, model, trainer = _trainer(m=1)
     mesh = make_mesh(1, 1, 1)
     rules = dict(sharding.DEFAULT_RULES)
-    with jax.set_mesh(mesh), sharding.use_rules(rules):
+    with sharding.set_mesh(mesh), sharding.use_rules(rules):
         state = trainer.init_state(jax.random.PRNGKey(0))
         batch = {
             "tokens": jnp.zeros((1, 2, 64), jnp.int32),
             "labels": jnp.zeros((1, 2, 64), jnp.int32),
         }
-        in_specs = (trainer.state_partition_specs(), trainer.batch_partition_specs(batch))
+        in_specs = (
+            sharding.tree_named(mesh, trainer.state_partition_specs()),
+            sharding.tree_named(mesh, trainer.batch_partition_specs(batch)),
+        )
         step = jax.jit(trainer.train_step, in_shardings=in_specs,
                        out_shardings=(in_specs[0], None))
         new_state, metrics = step(state, batch)
@@ -83,7 +86,7 @@ def test_collective_parser_on_real_hlo():
     def f(x):
         return jax.lax.with_sharding_constraint(x.sum(0, keepdims=True), P(None, None))
 
-    with jax.set_mesh(mesh):
+    with sharding.set_mesh(mesh):
         txt = jax.jit(lambda x: x @ x.T).lower(jnp.ones((128, 128))).compile().as_text()
     traffic = collective_traffic(txt)
     assert traffic["total_bytes"] >= 0  # no collectives on 1 device

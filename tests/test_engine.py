@@ -1,0 +1,229 @@
+"""Superstep engine tests: per-step equivalence, donation, data prefetch,
+and the streaming fragment schedule/config regressions."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import DiLoCoConfig, OptimizerConfig, TrainConfig, get_config
+from repro.core import streaming
+from repro.core.diloco import make_trainer
+from repro.core.superstep import RoundPrefetcher, SuperstepEngine, device_batch_fn
+from repro.data import SyntheticLM, TokenFileSource
+
+
+def _trainer(m=2, h=4, **kw):
+    cfg = get_config("tiny-t0")
+    from repro.models import build_model
+
+    model = build_model(cfg)
+    tcfg = TrainConfig(global_batch_tokens=4 * 128, seq_len=128, steps=50)
+    dkw = dict(num_replicas=m, sync_every=h)
+    dkw.update(kw)
+    trainer = make_trainer(
+        model, DiLoCoConfig(**dkw), OptimizerConfig(peak_lr=1e-3, warmup_steps=5), tcfg
+    )
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=128)
+    return trainer, data
+
+
+def _per_step_reference(trainer, data, steps, seqs):
+    """The classic inner_step/outer_sync loop (no donation: state stays
+    inspectable), including mid-round streaming fragment syncs."""
+    dcfg = trainer.dcfg
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    inner = jax.jit(trainer.inner_step)
+    outer = jax.jit(trainer.outer_sync)
+    losses = []
+    for t in range(steps):
+        state, met = inner(state, data.global_batch(t, trainer.M, seqs))
+        losses.append(float(met["loss"]))
+        if not dcfg.data_parallel:
+            if dcfg.streaming_fragments:
+                for f in streaming.fragments_due(
+                    t + 1, dcfg.streaming_fragments, dcfg.sync_every
+                ):
+                    state = streaming.outer_sync_fragment(trainer, state, f)
+            elif (t + 1) % dcfg.sync_every == 0:
+                state = outer(state)
+    return state, losses
+
+
+MODES = {
+    "dp": dict(m=1, data_parallel=True),
+    "diloco": dict(m=2),
+    "int8": dict(m=2, compression="int8"),
+    "streaming": dict(m=2, streaming_fragments=2),
+}
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+def test_superstep_matches_per_step_loop(mode):
+    """The compiled round must reproduce the per-step loop across an H
+    boundary (6 steps, H=4: one full round + a partial tail round)."""
+    kw = dict(MODES[mode])
+    m = kw.pop("m")
+    steps, h, seqs = 6, 4, 2
+    tr_ref, data = _trainer(m=m, h=h, **kw)
+    state_ref, losses_ref = _per_step_reference(tr_ref, data, steps, seqs)
+
+    tr_eng, _ = _trainer(m=m, h=h, **kw)
+    engine = SuperstepEngine(tr_eng, data, seqs)
+    state = tr_eng.init_state(jax.random.PRNGKey(0))
+    state, mets = engine.run(state, steps)
+
+    np.testing.assert_allclose(mets["loss"], losses_ref, rtol=2e-5, atol=1e-6)
+    assert int(state["step"]) == int(state_ref["step"]) == steps
+    for key in state_ref:
+        for a, b in zip(jax.tree.leaves(state[key]), jax.tree.leaves(state_ref[key])):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5,
+                err_msg=f"mode={mode} state[{key!r}]",
+            )
+
+
+def test_device_batch_fn_matches_host_batches():
+    """On-device generation folds the step counter exactly like the host."""
+    data = SyntheticLM(vocab_size=64, seq_len=32)
+    fn = jax.jit(device_batch_fn(data, num_replicas=3, batch_seqs=2))
+    for step in (0, 1, 17):
+        dev = fn(jnp.int32(step))
+        host = data.global_batch(step, 3, 2)
+        np.testing.assert_array_equal(np.asarray(dev["tokens"]), np.asarray(host["tokens"]))
+        np.testing.assert_array_equal(np.asarray(dev["labels"]), np.asarray(host["labels"]))
+
+
+def test_token_file_source_prefetch_matches_per_step(tmp_path):
+    """File-backed data takes the prefetcher path and still matches the
+    per-step loop exactly."""
+    rng = np.random.default_rng(0)
+    path = tmp_path / "tokens.bin"
+    rng.integers(0, 250, size=6000).astype(np.uint16).tofile(path)
+    data = TokenFileSource(str(path), seq_len=128)
+
+    tr_ref, _ = _trainer(m=2, h=2)
+    state_ref, losses_ref = _per_step_reference(tr_ref, data, 4, 2)
+
+    tr_eng, _ = _trainer(m=2, h=2)
+    engine = SuperstepEngine(tr_eng, data, 2)
+    assert not engine._on_device_data  # prefetcher path
+    state = tr_eng.init_state(jax.random.PRNGKey(0))
+    state, mets = engine.run(state, 4)
+    np.testing.assert_allclose(mets["loss"], losses_ref, rtol=2e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(state["global_params"]),
+                    jax.tree.leaves(state_ref["global_params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+def test_token_file_eval_is_held_out(tmp_path):
+    """eval=True batches must come from the reserved tail of the file."""
+    path = tmp_path / "t.bin"
+    np.arange(0, 40 * 4 + 1, dtype=np.uint16).tofile(path)
+    data = TokenFileSource(str(path), seq_len=4, eval_frac=0.25)
+    assert data._n_seqs == 30 and data._n_eval == 10
+    train_b = data.batch(0, 0, 1, 30)
+    eval_b = data.batch(0, 0, 1, 10, eval=True)
+    # file is arange: token value == position; pools must not overlap
+    assert int(np.max(train_b["tokens"])) < 30 * 4
+    assert int(np.min(eval_b["tokens"])) >= 30 * 4
+
+
+def test_round_prefetcher_double_buffers():
+    data = SyntheticLM(vocab_size=32, seq_len=16)
+    pf = RoundPrefetcher(data, num_replicas=2, batch_seqs=1)
+    xs = pf.get(0, 3)
+    assert xs["tokens"].shape == (3, 2, 1, 16)
+    assert (0 + 3, 3) in pf._pending  # next round already scheduled
+    xs2 = pf.get(3, 3)
+    ref = data.global_batch(4, 2, 1)
+    np.testing.assert_array_equal(np.asarray(xs2["tokens"][1]), np.asarray(ref["tokens"]))
+
+
+def test_donated_entry_points_consume_state():
+    """jit_inner_step/jit_outer_sync donate: the old state must be dead."""
+    trainer, data = _trainer(m=2, h=2)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    new_state, _ = trainer.jit_inner_step()(state, data.global_batch(0, 2, 1))
+    assert jax.tree.leaves(new_state["inner_params"])[0].is_deleted() is False
+    assert jax.tree.leaves(state["inner_params"])[0].is_deleted()
+    state2, _ = trainer.jit_inner_step()(new_state, data.global_batch(1, 2, 1))
+    synced = trainer.jit_outer_sync()(state2)
+    assert jax.tree.leaves(state2["global_params"])[0].is_deleted()
+    assert not jax.tree.leaves(synced["global_params"])[0].is_deleted()
+
+
+def test_superstep_run_round_consumes_state():
+    trainer, data = _trainer(m=2, h=2)
+    engine = SuperstepEngine(trainer, data, 1)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    new_state, mets = engine.run_round(state, 0)
+    assert mets["loss"].shape == (2,)
+    assert jax.tree.leaves(state["inner_params"])[0].is_deleted()
+    assert not jax.tree.leaves(new_state["inner_params"])[0].is_deleted()
+
+
+def test_superstep_rejects_bad_configs():
+    trainer, data = _trainer(m=2, h=4, streaming_fragments=2, compression="int8",
+                             error_feedback=False)
+    with pytest.raises(ValueError):
+        SuperstepEngine(trainer, data, 1)  # streaming + compression unsupported
+    # chunk length is free for DP but pinned to sync_every for DiLoCo
+    tr_dp, data = _trainer(m=1, h=4, data_parallel=True)
+    SuperstepEngine(tr_dp, data, 1, chunk=6)
+    tr_dl, data = _trainer(m=2, h=4)
+    with pytest.raises(ValueError):
+        SuperstepEngine(tr_dl, data, 1, chunk=6)
+
+
+def test_run_round_rejects_window_crossing_sync_boundary():
+    """A window spanning an interior H boundary would silently skip that
+    boundary's outer sync — the engine must refuse it."""
+    trainer, data = _trainer(m=2, h=4)
+    engine = SuperstepEngine(trainer, data, 1)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="outer-sync boundary"):
+        engine.run_round(state, start=2, length=4)  # crosses step 4
+    state, _ = engine.run_round(state, start=2, length=2)  # up to the boundary
+    state, _ = engine.run_round(state, start=4, length=3)  # tail, no boundary
+
+
+# ---------------------------------------------------------------------------
+# streaming fragment schedule regressions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("h,p", [(4, 1), (4, 2), (4, 4), (6, 3), (8, 4), (12, 4), (30, 5)])
+def test_fragment_schedule_each_fragment_once_per_round(h, p):
+    """Over every H-step round, each fragment must sync exactly once."""
+    for r in range(3):
+        due = [
+            f
+            for s in range(r * h + 1, (r + 1) * h + 1)
+            for f in streaming.fragments_due(s, p, h)
+        ]
+        assert sorted(due) == list(range(p)), (h, p, r, due)
+
+
+def test_fragments_gt_sync_every_rejected():
+    with pytest.raises(ValueError):
+        DiLoCoConfig(streaming_fragments=8, sync_every=4)
+    with pytest.raises(ValueError):
+        DiLoCoConfig(streaming_fragments=-1)
+    DiLoCoConfig(streaming_fragments=4, sync_every=4)  # boundary is valid
+
+
+def test_fragment_sync_static_partition_and_jit_cache():
+    trainer, data = _trainer(m=2, h=4, streaming_fragments=2)
+    sync = streaming.FragmentSync(trainer, donate=False)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    n_leaves = len(jax.tree.leaves(state["global_params"]))
+    assert len(sync.assignment) == n_leaves
+    assert sorted(set(sync.assignment)) == [0, 1]
+    f0 = sync.jitted(0)
+    assert sync.jitted(0) is f0  # cached, no retrace machinery per call
+    state2 = f0(state)
+    ref = streaming.outer_sync_fragment(trainer, state, 0)
+    for a, b in zip(jax.tree.leaves(state2["global_params"]),
+                    jax.tree.leaves(ref["global_params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
