@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test bench-smoke bench
+.PHONY: verify test bench-smoke bench resume-smoke
 
 verify: test bench-smoke
 
@@ -18,3 +18,8 @@ bench-smoke:
 
 bench:
 	$(PY) -m benchmarks.bench_engine
+
+# 20-step preemption drill: checkpoint at 10, resume, final loss must be
+# bitwise-equal to the uninterrupted run (exact-resume guarantee)
+resume-smoke:
+	$(PY) scripts/resume_smoke.py

@@ -30,7 +30,7 @@ data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=128)
 inner, outer = trainer.jit_inner_step(), trainer.jit_outer_sync()
 
 with tempfile.TemporaryDirectory() as tmp:
-    ck = Checkpointer(tmp, keep=2)
+    ck = Checkpointer(tmp, keep=2, trainer=trainer)
     state = trainer.init_state(jax.random.PRNGKey(0))
 
     # --- phase 1: train 10 steps, async-checkpoint, "crash" -------------
@@ -43,8 +43,9 @@ with tempfile.TemporaryDirectory() as tmp:
     print(f"crashed at step 10; checkpoints: {sorted(os.listdir(tmp))}")
 
     # --- phase 2: restart from the latest checkpoint ---------------------
-    template = trainer.init_state(jax.random.PRNGKey(99))
-    state, start = ck.restore(template)
+    # template-free: structure from trainer.abstract_state(), values bitwise
+    # from disk, leaves device_put (donation-safe)
+    state, start = ck.restore()
     print(f"restored at step {start}; data pipeline resumes exactly "
           f"(stateless, step-indexed)")
 
@@ -56,6 +57,8 @@ with tempfile.TemporaryDirectory() as tmp:
     print(f"outer sync with straggler dropped: loss={float(m['loss']):.4f}")
 
     # --- phase 4: elastic scale-down to 2 replicas, then scale up to 4 ----
+    # (same machinery Checkpointer.restore(num_replicas=M') uses; fresh
+    # replicas would get global params + cold-start AdamW state)
     state2 = elastic.resize_replicas(trainer, state, 2)
     print(f"scaled M 4->2: inner leading dims now "
           f"{jax.tree.leaves(state2['inner_params'])[0].shape[0]}")

@@ -1,1 +1,5 @@
-from repro.checkpoint.checkpointer import Checkpointer  # noqa: F401
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    SCHEMA_VERSION,
+    Checkpointer,
+    config_fingerprint,
+)

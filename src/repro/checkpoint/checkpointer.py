@@ -1,27 +1,57 @@
-"""Fault-tolerant checkpointing: atomic, async, keep-k, elastic-restore.
+"""Versioned, sharding-aware, elastic checkpoint/restore subsystem.
 
-Layout: ``<dir>/step_<n>/state.npz`` + ``manifest.json``.  Writes go to a
-``.tmp`` sibling then ``os.replace`` (atomic on POSIX) — a crash mid-save
-never corrupts the latest checkpoint.  ``save_async`` offloads serialization
-to a daemon thread so the train loop keeps stepping (save is snapshotted
-to host numpy first).
+Layout: ``<dir>/step_<n>/state.npz`` + ``manifest.json``.  Writes land in a
+``.tmp`` sibling that is fsynced (files, then the tmp dir, then the parent
+dir after the rename) before an atomic ``os.replace`` — a crash mid-save can
+never corrupt the newest checkpoint, and orphaned ``.tmp`` dirs from a crash
+are reaped on the next ``Checkpointer(...)`` construction.
 
-Elastic restore: DiLoCo state saved with M replicas can be restored with a
-different M' — new replicas bootstrap from the global model and fresh inner
-optimizer state (the paper's outer state is global-shaped, so momentum is
-carried exactly).
+Manifest schema v2 records everything needed to restore without a live
+template: schema version, step, per-leaf dtypes/shapes, ``num_replicas``,
+the sync mode (``none``/``int8``/``streaming``/``dp``) and a config
+fingerprint.  v1 directories (``{"step", "keys"}`` only) still load.
+
+Restore paths:
+
+* ``restore(template)`` — legacy exact-shape path: leaves are cast onto the
+  template's dtypes.
+* ``restore()`` with ``Checkpointer(dir, trainer=...)`` — template-free: the
+  tree *structure* comes from ``DiLoCo.abstract_state()``, the leaf values
+  and dtypes come from the checkpoint itself (bitwise-exact), and every leaf
+  is ``jax.device_put`` onto the current mesh via
+  ``trainer.state_partition_specs()`` — restored state is a committed,
+  sharded device tree, safe to hand straight to donating executables.
+* ``restore(num_replicas=M')`` — elastic: the saved M-replica state is
+  resized between outer rounds.  Surviving replicas keep their inner
+  optimizer state; fresh replicas start from the global params with zeroed
+  AdamW moments and a **zeroed** Adam ``count`` (cold-start bias
+  correction), and int8 error-feedback slices are grown/shrunk in step.
+
+``save_async`` snapshots the (possibly donated) device state to host numpy
+synchronously, then hands it to a persistent writer thread through a
+bounded queue (backpressure instead of unbounded host-RAM growth).  The
+worker only ever exits on an explicit sentinel (``close()``), so
+``wait()`` — a ``Queue.join()`` — is deterministic: it returns only after
+every enqueued checkpoint is on disk, and re-raises any writer error.
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import json
 import os
 import queue
 import shutil
 import threading
+import warnings
 from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
+
+SCHEMA_VERSION = 2
+
+_SENTINEL = object()
 
 
 def _flatten(tree) -> dict:
@@ -34,25 +64,118 @@ def _flatten(tree) -> dict:
     return flat
 
 
-def _unflatten(template, flat: dict):
+def _unflatten(template, flat: dict, *, cast: bool = True):
+    """Rebuild ``template``'s structure from ``flat``.
+
+    ``cast=True`` (legacy template path) casts onto the template leaf dtype;
+    ``cast=False`` (abstract-structure path) keeps the stored arrays
+    bitwise-exact — the template only supplies the treedef and key order.
+    """
     paths = jax.tree_util.tree_flatten_with_path(template)[0]
     treedef = jax.tree_util.tree_structure(template)
     leaves = []
     for path, leaf in paths:
         key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        if key not in flat:
+            raise KeyError(
+                f"checkpoint is missing leaf {key!r} required by the current "
+                f"config (stored keys: {sorted(flat)[:8]}...) — was it saved "
+                "under a different sync mode?"
+            )
         arr = flat[key]
-        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+        if cast and hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory by path (directory fds are valid on POSIX)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def config_fingerprint(trainer) -> str:
+    """Stable digest of the run configuration: model + algorithm + optimizer
+    + train schedule (steps/batch/seq_len/seed — these feed the lr schedule
+    and data stream, so changing them breaks exact resume).
+
+    ``num_replicas`` is deliberately excluded: elastic M -> M' restore is a
+    supported operation, not a config mismatch.
+    """
+    dcfg = dataclasses.asdict(trainer.dcfg)
+    dcfg.pop("num_replicas", None)
+    payload = {
+        "model": dataclasses.asdict(trainer.model.cfg),
+        "diloco": dcfg,
+        "optimizer": dataclasses.asdict(trainer.ocfg),
+        "train": {
+            k: getattr(trainer.tcfg, k)
+            for k in ("global_batch_tokens", "seq_len", "steps", "microbatches", "seed")
+        },
+    }
+    blob = json.dumps(payload, sort_keys=True, default=str).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
 class Checkpointer:
-    def __init__(self, directory: str, keep: int = 3):
+    """Atomic, async, keep-k, elastic checkpointing (see module docstring).
+
+    ``trainer`` (a ``repro.core.diloco.DiLoCo``) enables the v2 manifest
+    metadata and template-free / elastic ``restore()``; without it the
+    Checkpointer still saves v2 manifests (minus config metadata) and
+    restores via the legacy template path.
+    """
+
+    def __init__(
+        self,
+        directory: str,
+        keep: int = 3,
+        *,
+        trainer: Any = None,
+        max_inflight: int = 2,
+    ):
         self.dir = directory
         self.keep = keep
+        self.trainer = trainer
         os.makedirs(directory, exist_ok=True)
-        self._q: "queue.Queue" = queue.Queue()
+        self._reap_tmp()
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, max_inflight))
         self._worker: Optional[threading.Thread] = None
+        self._worker_lock = threading.Lock()
         self._error: Optional[Exception] = None
+
+    def _reap_tmp(self) -> None:
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    # ---- manifest --------------------------------------------------------
+    def _manifest(self, flat: dict, step: int) -> dict:
+        man = {
+            "schema": SCHEMA_VERSION,
+            "step": step,
+            "keys": sorted(flat),
+            "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+            "shapes": {k: list(v.shape) for k, v in flat.items()},
+        }
+        if self.trainer is not None:
+            man["num_replicas"] = int(self.trainer.M)
+            man["sync_mode"] = self.trainer.sync_mode
+            man["fingerprint"] = config_fingerprint(self.trainer)
+        return man
+
+    def _read_manifest(self, step: int) -> dict:
+        path = os.path.join(self.dir, f"step_{step:010d}", "manifest.json")
+        if not os.path.exists(path):
+            return {"schema": 1, "step": step}
+        with open(path) as f:
+            man = json.load(f)
+        man.setdefault("schema", 1)
+        return man
 
     # ---- sync ------------------------------------------------------------
     def save(self, state: Any, step: int) -> str:
@@ -65,45 +188,91 @@ class Checkpointer:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "state.npz"), **flat)
+        npz = os.path.join(tmp, "state.npz")
+        np.savez(npz, **flat)
+        _fsync_path(npz)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump({"step": step, "keys": sorted(flat)}, f)
+            json.dump(self._manifest(flat, step), f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_path(tmp)
         if os.path.exists(final):
-            shutil.rmtree(final)
-        os.replace(tmp, final)
+            # never rmtree the published dir before the new one is in place:
+            # move it aside first so a crash anywhere in this window leaves
+            # either the old or the new checkpoint (the .tmp suffix keeps it
+            # invisible to latest_step and reaped by the next __init__)
+            old = final + ".old.tmp"
+            if os.path.exists(old):
+                shutil.rmtree(old)
+            os.replace(final, old)
+            os.replace(tmp, final)
+            _fsync_path(self.dir)  # durably publish the rename
+            shutil.rmtree(old)
+        else:
+            os.replace(tmp, final)
+            _fsync_path(self.dir)
         self._gc()
         return final
 
-    # ---- async ---------------------------------------------------------------
+    # ---- async -----------------------------------------------------------
     def save_async(self, state: Any, step: int) -> None:
-        if self._error is not None:
-            raise self._error
-        flat = _flatten(jax.tree.map(lambda x: np.asarray(x), state))  # snapshot now
-        if self._worker is None or not self._worker.is_alive():
-            self._worker = threading.Thread(target=self._drain, daemon=True)
-            self._worker.start()
+        """Snapshot ``state`` to host numpy NOW (so the caller may donate it
+        immediately afterwards) and enqueue the write.  Blocks only when
+        ``max_inflight`` saves are already pending (backpressure)."""
+        self._raise_pending()
+        flat = _flatten(state)  # device -> host snapshot before returning
+        self._ensure_worker()
         self._q.put((flat, step))
 
-    def _drain(self):
+    def _ensure_worker(self) -> None:
+        with self._worker_lock:
+            if self._worker is None or not self._worker.is_alive():
+                self._worker = threading.Thread(
+                    target=self._drain, name="ckpt-writer", daemon=True
+                )
+                self._worker.start()
+
+    def _drain(self) -> None:
+        # Persistent worker: runs until it sees the shutdown sentinel.  There
+        # is no idle timeout, so there is no window in which save_async can
+        # observe a live worker that is about to exit (the old TOCTOU race
+        # that could strand the final checkpoint in the queue forever).
         while True:
+            item = self._q.get()
             try:
-                flat, step = self._q.get(timeout=1.0)
-            except queue.Empty:
-                return
-            try:
+                if item is _SENTINEL:
+                    return
+                flat, step = item
                 self._write(flat, step)
-            except Exception as e:  # surfaced on next save_async
+            except Exception as e:  # re-raised by wait()/next save_async
                 self._error = e
             finally:
                 self._q.task_done()
 
-    def wait(self):
-        if self._worker is not None and self._worker.is_alive():
+    def wait(self) -> None:
+        """Block until every enqueued save is durably on disk; re-raise any
+        writer error.  Deterministic: the worker never exits on its own, so
+        ``Queue.join()`` cannot return with items still stranded."""
+        if self._worker is not None:
             self._q.join()
-        if self._error is not None:
-            raise self._error
+        self._raise_pending()
 
-    # ---- restore -----------------------------------------------------------------
+    def close(self) -> None:
+        """Drain pending saves, then shut the writer thread down."""
+        with self._worker_lock:
+            worker, self._worker = self._worker, None
+        if worker is not None and worker.is_alive():
+            self._q.put(_SENTINEL)
+            self._q.join()
+            worker.join()
+        self._raise_pending()
+
+    def _raise_pending(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ---- restore ---------------------------------------------------------
     def latest_step(self) -> Optional[int]:
         steps = [
             int(d.split("_")[1])
@@ -112,7 +281,16 @@ class Checkpointer:
         ]
         return max(steps) if steps else None
 
-    def restore(self, template: Any, step: Optional[int] = None) -> Tuple[Any, int]:
+    def restore(
+        self,
+        template: Any = None,
+        step: Optional[int] = None,
+        *,
+        num_replicas: Optional[int] = None,
+        strict_fingerprint: bool = False,
+    ) -> Tuple[Any, int]:
+        """Restore a checkpoint; see the module docstring for the three
+        modes (template / template-free / elastic).  Returns (state, step)."""
         if step is None:
             step = self.latest_step()
             if step is None:
@@ -120,9 +298,73 @@ class Checkpointer:
         path = os.path.join(self.dir, f"step_{step:010d}", "state.npz")
         with np.load(path) as z:
             flat = {k: z[k] for k in z.files}
-        return _unflatten(template, flat), step
+        manifest = self._read_manifest(step)
 
-    def _gc(self):
+        if template is not None:
+            if num_replicas is not None:
+                raise ValueError(
+                    "restore(template=..., num_replicas=...) is ambiguous: "
+                    "elastic restore requires the template-free trainer path "
+                    "(Checkpointer(dir, trainer=...).restore(num_replicas=M'))"
+                )
+            return _unflatten(template, flat, cast=True), step
+
+        if self.trainer is None:
+            raise ValueError(
+                "template-free restore requires Checkpointer(dir, trainer=...)"
+            )
+        trainer = self.trainer
+        self._check_fingerprint(manifest, strict_fingerprint)
+
+        # Structure from abstract_state(); values/dtypes bitwise from disk.
+        abstract = trainer.abstract_state()
+        state = _unflatten(abstract, flat, cast=False)
+
+        saved_m = manifest.get("num_replicas")
+        if saved_m is None:  # v1 manifest: infer from the replica axis
+            saved_m = int(flat["inner_opt/count"].shape[0])
+        target_m = int(num_replicas) if num_replicas is not None else trainer.M
+        if target_m != saved_m:
+            if trainer.dcfg.data_parallel:
+                raise ValueError(
+                    f"cannot elastically restore a data-parallel run "
+                    f"(saved M={saved_m}, requested M'={target_m})"
+                )
+            from repro.core import elastic
+
+            state = elastic.resize_replicas(trainer, state, target_m)
+        return self._device_put(state, trainer), step
+
+    def _check_fingerprint(self, manifest: dict, strict: bool) -> None:
+        saved = manifest.get("fingerprint")
+        if saved is None:
+            return
+        current = config_fingerprint(self.trainer)
+        if saved != current:
+            msg = (
+                f"checkpoint config fingerprint {saved} != current {current}: "
+                "the run configuration changed since this checkpoint was "
+                "saved (model / optimizer / sync mode / train schedule — "
+                "steps, batch, seq_len, seed — drift?); resumed training "
+                "will not be an exact continuation"
+            )
+            if strict:
+                raise ValueError(msg)
+            warnings.warn(msg, stacklevel=3)
+
+    def _device_put(self, state: Any, trainer: Any):
+        """Place every leaf on device — sharded per the trainer's partition
+        specs when a mesh is active — so the restored tree is committed and
+        donation-safe (host numpy leaves are not)."""
+        from repro import sharding
+
+        mesh = sharding.current_mesh()
+        if mesh is not None and sharding.current_rules():
+            shardings = sharding.tree_named(mesh, trainer.state_partition_specs())
+            return jax.tree.map(jax.device_put, state, shardings)
+        return jax.tree.map(jax.device_put, state)
+
+    def _gc(self) -> None:
         steps = sorted(
             d for d in os.listdir(self.dir) if d.startswith("step_") and not d.endswith(".tmp")
         )

@@ -188,6 +188,15 @@ class DiLoCoConfig:
     def __post_init__(self):
         if self.streaming_fragments < 0:
             raise ValueError(f"streaming_fragments must be >= 0, got {self.streaming_fragments}")
+        if self.streaming_fragments > 0 and self.compression != "none":
+            # fragment syncs bypass the compressed outer path entirely, so
+            # accepting both would silently drop compression (and stamp the
+            # wrong sync_mode into checkpoint manifests)
+            raise ValueError(
+                "streaming fragments do not support outer compression "
+                f"(streaming_fragments={self.streaming_fragments}, "
+                f"compression={self.compression!r})"
+            )
         if self.streaming_fragments > self.sync_every:
             # stride = max(H // P, 1) clamps to 1 and fragments collide on the
             # same step instead of spreading uniformly over the round

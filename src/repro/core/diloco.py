@@ -78,6 +78,19 @@ class DiLoCo:
     def M(self) -> int:
         return self.dcfg.num_replicas
 
+    @property
+    def sync_mode(self) -> str:
+        """Outer-sync flavor, as recorded in checkpoint manifests:
+        ``dp`` (no outer step) / ``none`` (full-precision) / ``int8`` /
+        ``streaming``."""
+        if self.dcfg.data_parallel:
+            return "dp"
+        if self.dcfg.compression == "int8":
+            return "int8"
+        if self.dcfg.streaming_fragments > 0:
+            return "streaming"
+        return "none"
+
     # ---- state ------------------------------------------------------------
     def init_state(self, key: jax.Array, dtype=jnp.float32) -> dict:
         gparams = self.model.init(key, dtype)

@@ -9,7 +9,12 @@ DiLoCo's outer boundary is a natural fault-isolation point:
   last sync.
 * **Elastic resize** — ``resize_replicas``: M can change *between rounds*.
   Surviving replicas keep their inner optimizer state; new replicas
-  bootstrap from the global model with fresh inner state.  Outer momentum is
+  bootstrap from the global model with a genuinely cold-start inner
+  optimizer: zero AdamW moments AND a zero Adam ``count``, so their first
+  update gets the correct ``1-β^1`` bias correction instead of inheriting
+  replica 0's step count against zeroed moments (which under-scales the
+  debiased moments by ``(1-β^1)/(1-β^count)``).  int8 error-feedback slices
+  are grown with zero residuals / shrunk consistently.  Outer momentum is
   global-shaped, so it carries over exactly.
 """
 from __future__ import annotations
@@ -26,25 +31,35 @@ def participation_weights(mask) -> jax.Array:
 
 
 def resize_replicas(trainer, state: dict, new_m: int) -> dict:
-    """Return a state with ``new_m`` replicas (DiLoCo only, between rounds)."""
+    """Return a state with ``new_m`` replicas (DiLoCo only, between rounds).
+
+    The old replica count is derived from the state itself (not
+    ``trainer.M``), so this also serves elastic *restore*: a trainer already
+    configured for M' can resize a checkpointed M-replica state.
+    """
     assert not trainer.dcfg.data_parallel
-    old_m = trainer.M
     gparams = state["global_params"]
+    old_m = int(jax.tree.leaves(state["inner_params"])[0].shape[0])
 
     def grow(leaf, fresh):
+        leaf = jnp.asarray(leaf)
         if new_m <= old_m:
             return leaf[:new_m]
-        extra = jnp.repeat(fresh[None], new_m - old_m, 0).astype(leaf.dtype)
+        extra = jnp.repeat(jnp.asarray(fresh)[None], new_m - old_m, 0).astype(leaf.dtype)
         return jnp.concatenate([leaf, extra], axis=0)
 
     new_inner = jax.tree.map(grow, state["inner_params"], gparams)
     zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), gparams)
+    count = jnp.asarray(state["inner_opt"]["count"])
+    # fresh replicas start at count=0: cold-start AdamW bias correction
+    new_count = grow(count, jnp.zeros((), count.dtype))
     new_opt = {
         "m": jax.tree.map(grow, state["inner_opt"]["m"], zeros),
         "v": jax.tree.map(grow, state["inner_opt"]["v"], zeros),
-        "count": grow(state["inner_opt"]["count"], state["inner_opt"]["count"][0]),
+        "count": new_count,
     }
     out = {**state, "inner_params": new_inner, "inner_opt": new_opt}
     if "ef" in state:
+        # fresh replicas have transmitted nothing: zero residual
         out["ef"] = jax.tree.map(grow, state["ef"], zeros)
     return out

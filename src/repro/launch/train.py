@@ -121,14 +121,18 @@ def _eval_record(args, data, state, eval_step, seqs_per_replica):
 def train_loop(args, trainer, data, steps, *, mesh=None, rules=None, quiet=False):
     m = trainer.M
     seqs_per_replica = max(1, args.batch_tokens // args.seq_len // m)
-    ckpt = Checkpointer(args.checkpoint_dir) if args.checkpoint_dir else None
+    ckpt = Checkpointer(args.checkpoint_dir, trainer=trainer) if args.checkpoint_dir else None
 
-    state = trainer.init_state(jax.random.PRNGKey(args.seed))
-    start = 0
+    state, start = None, 0
     if ckpt and args.resume and ckpt.latest_step() is not None:
-        state, start = ckpt.restore(state)
+        # template-free restore: exact dtypes/values from the manifest-v2
+        # checkpoint, device_put sharded onto the current mesh, and elastic
+        # M -> trainer.M resize if --replicas changed since the save
+        state, start = ckpt.restore()
         if not quiet:
-            print(f"resumed from step {start}")
+            print(f"resumed from step {start} (M={trainer.M})")
+    if state is None:
+        state = trainer.init_state(jax.random.PRNGKey(args.seed))
 
     if args.straggler_rate > 0 and trainer.dcfg.streaming_fragments > 0 and not quiet:
         print("warning: --straggler-rate has no effect with streaming "
@@ -144,7 +148,13 @@ def train_loop(args, trainer, data, steps, *, mesh=None, rules=None, quiet=False
     )
     if ckpt:
         ckpt.wait()
-        ckpt.save(state, steps)
+        # save at the state's own step (== steps after a full run; a resume
+        # at/past the end must not publish a manifest claiming a step the
+        # state isn't at), unless the periodic cadence already wrote it
+        cur = int(np.asarray(state["step"]))
+        if ckpt.latest_step() != cur:
+            ckpt.save(state, cur)
+        ckpt.close()
     return state, history
 
 
@@ -156,6 +166,17 @@ def _superstep_loop(args, trainer, data, steps, state, start, ckpt, *,
     come due (the engine never breaks a round open mid-scan).
     """
     engine = SuperstepEngine(trainer, data, seqs_per_replica)
+    try:
+        return _superstep_rounds(
+            args, trainer, data, steps, state, start, ckpt, engine,
+            seqs_per_replica=seqs_per_replica, quiet=quiet,
+        )
+    finally:
+        engine.close()  # drop speculative readahead on exit or error
+
+
+def _superstep_rounds(args, trainer, data, steps, state, start, ckpt, engine, *,
+                      seqs_per_replica, quiet):
     eval_step = jax.jit(trainer.eval_step)
     rng = np.random.default_rng(args.seed + 99)
     m = trainer.M
@@ -245,10 +266,14 @@ def main():
             state, history = train_loop(args, trainer, data, steps, mesh=mesh)
     else:
         state, history = train_loop(args, trainer, data, steps)
-    final = history[-1]
-    floor = data.entropy_floor() if hasattr(data, "entropy_floor") else float("nan")
-    print(f"final: loss={final['loss']:.4f} eval_nll={final.get('eval_nll', float('nan')):.4f} "
-          f"(source entropy floor ~{floor:.4f})")
+    if history:
+        final = history[-1]
+        floor = data.entropy_floor() if hasattr(data, "entropy_floor") else float("nan")
+        print(f"final: loss={final['loss']:.4f} eval_nll={final.get('eval_nll', float('nan')):.4f} "
+              f"(source entropy floor ~{floor:.4f})")
+    else:
+        print(f"nothing to do: resumed at step {int(np.asarray(state['step']))} "
+              f">= steps ({steps})")
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(history, f)

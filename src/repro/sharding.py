@@ -42,15 +42,33 @@ DEFAULT_RULES = {
 }
 
 
+_MESH: contextvars.ContextVar = contextvars.ContextVar("sharding_mesh", default=None)
+
+
+@contextlib.contextmanager
 def set_mesh(mesh):
     """Version-portable ``jax.set_mesh``: context manager activating ``mesh``.
 
     Newer jax exposes ``jax.set_mesh``; on older versions the Mesh object is
-    itself the context manager that binds the ambient mesh.
+    itself the context manager that binds the ambient mesh.  The active mesh
+    is also recorded so mesh-aware helpers (``current_mesh``, checkpoint
+    restore's sharded ``device_put``) can find it.
     """
-    if hasattr(jax, "set_mesh"):
-        return jax.set_mesh(mesh)
-    return mesh
+    token = _MESH.set(mesh)
+    try:
+        if hasattr(jax, "set_mesh"):
+            with jax.set_mesh(mesh):
+                yield mesh
+        else:
+            with mesh:
+                yield mesh
+    finally:
+        _MESH.reset(token)
+
+
+def current_mesh():
+    """The mesh activated by the innermost ``set_mesh`` (None outside)."""
+    return _MESH.get()
 
 
 def tree_named(mesh, spec_tree):

@@ -1,0 +1,353 @@
+"""Checkpoint subsystem tests: manifest v2 + v1 compat, deterministic async
+saves, atomicity hygiene, template-free / elastic restore, and the
+cold-start AdamW semantics of fresh replicas."""
+import json
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import SCHEMA_VERSION, Checkpointer, config_fingerprint
+from repro.configs import DiLoCoConfig, OptimizerConfig, TrainConfig, get_config
+from repro.core import elastic
+from repro.core.diloco import make_trainer
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.optim import adamw_init
+
+
+def _mk(m=2, h=4, steps=20, **dkw):
+    cfg = get_config("tiny-t0")
+    model = build_model(cfg)
+    tcfg = TrainConfig(global_batch_tokens=2 * 128, seq_len=128, steps=steps)
+    dcfg = DiLoCoConfig(num_replicas=m, sync_every=h, **dkw)
+    ocfg = OptimizerConfig(peak_lr=3e-3, warmup_steps=2)
+    trainer = make_trainer(model, dcfg, ocfg, tcfg)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=128)
+    return trainer, data
+
+
+def _advance(trainer, data, state, t0, t1, seqs=1):
+    inner = jax.jit(trainer.inner_step)
+    for t in range(t0, t1):
+        state, _ = inner(state, data.global_batch(t, trainer.M, seqs))
+        if (t + 1) % trainer.dcfg.sync_every == 0:
+            state = trainer.outer_sync(state)
+    return state
+
+
+def _assert_tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# manifest schema
+# ---------------------------------------------------------------------------
+
+
+def test_manifest_v2_records_run_metadata(tmp_path):
+    trainer, data = _mk(m=2, compression="int8")
+    state = _advance(trainer, data, trainer.init_state(jax.random.PRNGKey(0)), 0, 2)
+    ck = Checkpointer(str(tmp_path), trainer=trainer)
+    ck.save(state, 2)
+    with open(tmp_path / "step_0000000002" / "manifest.json") as f:
+        man = json.load(f)
+    assert man["schema"] == SCHEMA_VERSION
+    assert man["step"] == 2
+    assert man["num_replicas"] == 2
+    assert man["sync_mode"] == "int8"
+    assert man["fingerprint"] == config_fingerprint(trainer)
+    assert man["dtypes"]["inner_opt/count"] == "int32"
+    assert man["shapes"]["inner_opt/count"] == [2]
+    assert set(man["keys"]) == set(man["dtypes"])
+
+
+def test_v1_manifest_backward_compat(tmp_path):
+    """Old-style dirs ({"step","keys"} manifest) restore through both the
+    template path and the template-free path (M inferred from the state)."""
+    trainer, data = _mk(m=2)
+    state = _advance(trainer, data, trainer.init_state(jax.random.PRNGKey(0)), 0, 3)
+    ck = Checkpointer(str(tmp_path), trainer=trainer)
+    ck.save(state, 3)
+    man_path = tmp_path / "step_0000000003" / "manifest.json"
+    flat_keys = json.load(open(man_path))["keys"]
+    with open(man_path, "w") as f:
+        json.dump({"step": 3, "keys": flat_keys}, f)  # rewrite as v1
+
+    template = trainer.init_state(jax.random.PRNGKey(7))
+    r_tmpl, step = Checkpointer(str(tmp_path)).restore(template)
+    assert step == 3
+    _assert_tree_equal(r_tmpl, state)
+
+    r_free, step = Checkpointer(str(tmp_path), trainer=trainer).restore()
+    assert step == 3
+    _assert_tree_equal(r_free, state)
+
+
+def test_fingerprint_drift_warns_and_strict_raises(tmp_path):
+    trainer, data = _mk(m=2)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    Checkpointer(str(tmp_path), trainer=trainer).save(state, 1)
+    drifted, _ = _mk(m=2, h=8)  # sync cadence changed -> new fingerprint
+    ck = Checkpointer(str(tmp_path), trainer=drifted)
+    with pytest.warns(UserWarning, match="fingerprint"):
+        ck.restore()
+    with pytest.raises(ValueError, match="fingerprint"):
+        ck.restore(strict_fingerprint=True)
+
+
+def test_elastic_resize_does_not_change_fingerprint():
+    tr2, _ = _mk(m=2)
+    tr4, _ = _mk(m=4)
+    assert config_fingerprint(tr2) == config_fingerprint(tr4)
+
+
+# ---------------------------------------------------------------------------
+# async pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_save_async_wait_never_loses_checkpoint(tmp_path):
+    """Hammer save_async/wait cycles: the old 1s-idle worker could exit
+    between its liveness check and the enqueue, stranding the item and
+    letting wait() return without writing anything."""
+    trainer, data = _mk(m=1, data_parallel=True)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path), keep=2, trainer=trainer)
+    for i in range(1, 26):
+        ck.save_async(state, i)
+        ck.wait()
+        assert ck.latest_step() == i, f"checkpoint {i} lost"
+    ck.close()
+    assert ck.latest_step() == 25
+
+
+def test_save_async_burst_then_single_wait(tmp_path):
+    trainer, _ = _mk(m=1, data_parallel=True)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path), keep=0, trainer=trainer, max_inflight=1)
+    for i in range(1, 7):  # max_inflight=1 exercises put() backpressure
+        ck.save_async(state, i)
+    ck.wait()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [1, 2, 3, 4, 5, 6]
+    ck.close()
+
+
+def test_async_write_error_surfaces_on_wait(tmp_path):
+    trainer, _ = _mk(m=1, data_parallel=True)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path), trainer=trainer)
+
+    def boom(flat, step):
+        raise RuntimeError("disk on fire")
+
+    ck._write = boom
+    ck.save_async(state, 1)
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        ck.wait()
+    # error is cleared after being raised; pipeline is usable again
+    del ck._write
+    ck.save_async(state, 2)
+    ck.wait()
+    assert ck.latest_step() == 2
+    ck.close()
+
+
+def test_close_is_idempotent_and_worker_restarts(tmp_path):
+    trainer, _ = _mk(m=1, data_parallel=True)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path), trainer=trainer)
+    ck.save_async(state, 1)
+    ck.close()
+    ck.close()
+    assert threading.active_count() >= 1
+    ck.save_async(state, 2)  # restarts the worker after close
+    ck.wait()
+    assert ck.latest_step() == 2
+    ck.close()
+
+
+# ---------------------------------------------------------------------------
+# atomicity hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_orphaned_tmp_dirs_reaped_on_init(tmp_path):
+    orphan = tmp_path / "step_0000000007.tmp"
+    orphan.mkdir()
+    (orphan / "state.npz").write_bytes(b"garbage from a crash mid-save")
+    ck = Checkpointer(str(tmp_path))
+    assert not orphan.exists()
+    assert ck.latest_step() is None
+
+
+def test_overwrite_same_step_keeps_a_checkpoint_at_all_times(tmp_path):
+    """Re-saving an existing step must move the published dir aside before
+    installing the new one (never rmtree-then-replace), and leave no
+    .tmp artifacts behind."""
+    trainer, data = _mk(m=1, data_parallel=True)
+    s1 = trainer.init_state(jax.random.PRNGKey(0))
+    s2 = trainer.init_state(jax.random.PRNGKey(1))
+    ck = Checkpointer(str(tmp_path), trainer=trainer)
+    ck.save(s1, 3)
+    ck.save(s2, 3)  # overwrite
+    assert ck.latest_step() == 3
+    restored, _ = Checkpointer(str(tmp_path), trainer=trainer).restore()
+    _assert_tree_equal(restored, s2)
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+    # a crash artifact of the move-aside protocol is reaped on init
+    (tmp_path / "step_0000000003.old.tmp").mkdir()
+    Checkpointer(str(tmp_path), trainer=trainer)
+    assert not (tmp_path / "step_0000000003.old.tmp").exists()
+
+
+def test_tmp_never_visible_as_checkpoint(tmp_path):
+    trainer, _ = _mk(m=1, data_parallel=True)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path), trainer=trainer)
+    ck.save(state, 1)
+    (tmp_path / "step_0000000002.tmp").mkdir()  # crash artifact appears later
+    assert ck.latest_step() == 1
+    ck.save(state, 3)  # next save still succeeds and gc tolerates the .tmp
+    assert ck.latest_step() == 3
+
+
+# ---------------------------------------------------------------------------
+# template-free + elastic restore
+# ---------------------------------------------------------------------------
+
+
+def test_template_free_restore_is_bitwise_and_donation_safe(tmp_path):
+    trainer, data = _mk(m=2, compression="int8")
+    state = _advance(trainer, data, trainer.init_state(jax.random.PRNGKey(0)), 0, 5)
+    Checkpointer(str(tmp_path), trainer=trainer).save(state, 5)
+
+    tr2, data = _mk(m=2, compression="int8")  # "fresh process"
+    restored, step = Checkpointer(str(tmp_path), trainer=tr2).restore()
+    assert step == 5
+    _assert_tree_equal(restored, state)
+    # leaves are committed device arrays: a donating call consumes them
+    assert all(isinstance(l, jax.Array) for l in jax.tree.leaves(restored))
+    out, _ = tr2.jit_inner_step()(restored, data.global_batch(5, 2, 1))
+    assert jax.tree.leaves(restored["inner_params"])[0].is_deleted()
+    assert not jax.tree.leaves(out["inner_params"])[0].is_deleted()
+
+
+def test_template_free_restore_requires_trainer(tmp_path):
+    trainer, _ = _mk(m=2)
+    Checkpointer(str(tmp_path), trainer=trainer).save(
+        trainer.init_state(jax.random.PRNGKey(0)), 1
+    )
+    with pytest.raises(ValueError, match="trainer"):
+        Checkpointer(str(tmp_path)).restore()
+
+
+def test_restore_sync_mode_mismatch_is_loud(tmp_path):
+    """A checkpoint saved without error-feedback state cannot silently
+    restore into an int8+EF trainer."""
+    plain, data = _mk(m=2)
+    state = _advance(plain, data, plain.init_state(jax.random.PRNGKey(0)), 0, 2)
+    Checkpointer(str(tmp_path), trainer=plain).save(state, 2)
+    int8, _ = _mk(m=2, compression="int8")
+    with pytest.raises(KeyError, match="ef"), pytest.warns(UserWarning):
+        Checkpointer(str(tmp_path), trainer=int8).restore()
+
+
+@pytest.mark.parametrize("m_from,m_to", [(2, 4), (4, 2)])
+def test_elastic_restore_resizes_and_trains_on(tmp_path, m_from, m_to):
+    tr_a, data = _mk(m=m_from)
+    state = _advance(tr_a, data, tr_a.init_state(jax.random.PRNGKey(0)), 0, 4)
+    Checkpointer(str(tmp_path), trainer=tr_a).save(state, 4)
+
+    tr_b, data = _mk(m=m_to)
+    restored, step = Checkpointer(str(tmp_path), trainer=tr_b).restore()
+    assert step == 4
+    for leaf in jax.tree.leaves(restored["inner_params"]):
+        assert leaf.shape[0] == m_to
+    count = np.asarray(restored["inner_opt"]["count"])
+    assert count.shape == (m_to,)
+    if m_to > m_from:
+        assert (count[:m_from] == 4).all() and (count[m_from:] == 0).all()
+        # fresh replicas start from the global model
+        for ip, gp in zip(jax.tree.leaves(restored["inner_params"]),
+                          jax.tree.leaves(restored["global_params"])):
+            np.testing.assert_array_equal(
+                np.asarray(ip[m_from]), np.asarray(gp).astype(ip.dtype))
+        for mom in jax.tree.leaves(restored["inner_opt"]["m"]):
+            assert float(np.abs(np.asarray(mom[m_from:])).max()) == 0.0
+    # training continues without shape errors through an outer sync
+    restored = _advance(tr_b, data, restored, 4, 8)
+    assert int(restored["step"]) == 8
+
+
+def test_elastic_restore_grows_error_feedback(tmp_path):
+    tr_a, data = _mk(m=2, compression="int8")
+    state = _advance(tr_a, data, tr_a.init_state(jax.random.PRNGKey(0)), 0, 4)
+    Checkpointer(str(tmp_path), trainer=tr_a).save(state, 4)
+    tr_b, data = _mk(m=4, compression="int8")
+    restored, _ = Checkpointer(str(tmp_path), trainer=tr_b).restore()
+    for leaf in jax.tree.leaves(restored["ef"]):
+        assert leaf.shape[0] == 4
+        assert float(np.abs(np.asarray(leaf[2:])).max()) == 0.0  # fresh = zero residual
+    restored = _advance(tr_b, data, restored, 4, 8)
+    assert int(restored["step"]) == 8
+
+
+def test_elastic_restore_rejected_for_data_parallel(tmp_path):
+    trainer, _ = _mk(m=1, data_parallel=True)
+    Checkpointer(str(tmp_path), trainer=trainer).save(
+        trainer.init_state(jax.random.PRNGKey(0)), 1
+    )
+    with pytest.raises(ValueError, match="data-parallel"):
+        Checkpointer(str(tmp_path), trainer=trainer).restore(num_replicas=2)
+
+
+# ---------------------------------------------------------------------------
+# fresh-replica AdamW semantics (the resize_replicas count bug)
+# ---------------------------------------------------------------------------
+
+
+def test_resized_fresh_replica_first_update_is_cold_start_adamw():
+    """A grown replica's first post-resize update must match a cold-start
+    AdamW step from the global params: zero moments AND count=0.  With the
+    old inherited count c, bias correction divides the first moment by
+    1-β1^c ≈ 1 instead of 1-β1 = 0.1, under-scaling the update ~10x."""
+    trainer, data = _mk(m=2, h=4)
+    state = _advance(trainer, data, trainer.init_state(jax.random.PRNGKey(0)), 0, 4)
+    assert int(np.asarray(state["inner_opt"]["count"])[0]) == 4
+
+    grown = elastic.resize_replicas(trainer, state, 3)
+    batch = data.global_batch(4, 3, 1)
+    stepped, _ = jax.jit(trainer.inner_step)(grown, batch)
+
+    # reference: genuine cold-start AdamW from the global params on the
+    # fresh replica's own data shard at the same lr-schedule step
+    gp = state["global_params"]
+    shard = jax.tree.map(lambda x: x[2], batch)
+    p_ref, opt_ref, _ = trainer._replica_step(gp, adamw_init(gp), shard, state["step"])
+
+    assert int(np.asarray(stepped["inner_opt"]["count"])[2]) == 1
+    for a, b in zip(jax.tree.leaves(stepped["inner_params"]),
+                    jax.tree.leaves(p_ref)):
+        # vmapped vs unvmapped step: tiny fp reassociation; the inherited-
+        # count bug this guards against is a ~10x update error
+        np.testing.assert_allclose(
+            np.asarray(a)[2], np.asarray(b), rtol=1e-3, atol=5e-5)
+
+
+def test_resize_derives_old_m_from_state_not_trainer():
+    """resize_replicas must work when the trainer is already configured for
+    the target M (the elastic-restore call pattern)."""
+    tr2, data = _mk(m=2)
+    state = _advance(tr2, data, tr2.init_state(jax.random.PRNGKey(0)), 0, 2)
+    tr4, _ = _mk(m=4)
+    grown = elastic.resize_replicas(tr4, state, 4)  # old M read from state
+    assert jax.tree.leaves(grown["inner_params"])[0].shape[0] == 4
+    assert list(np.asarray(grown["inner_opt"]["count"])) == [2, 2, 0, 0]

@@ -79,6 +79,33 @@ def test_input_specs_match_partition_specs(arch):
         assert set(inputs.keys()) == set(specs.keys())
 
 
+def test_restore_device_puts_onto_active_mesh(tmp_path):
+    """Template-free restore under an active mesh: leaves come back as
+    committed device arrays sharded per state_partition_specs (not host
+    numpy), so the first donating call after a restart works in place."""
+    from jax.sharding import NamedSharding
+
+    from repro.checkpoint import Checkpointer
+
+    cfg, model, trainer = _trainer(m=2)
+    mesh = make_mesh(1, 1, 1)
+    rules = dict(sharding.DEFAULT_RULES)
+    with sharding.set_mesh(mesh), sharding.use_rules(rules):
+        assert sharding.current_mesh() is mesh
+        state = trainer.init_state(jax.random.PRNGKey(0))
+        ck = Checkpointer(str(tmp_path), trainer=trainer)
+        ck.save(state, 1)
+        restored, step = ck.restore()
+        specs = jax.tree.leaves(
+            trainer.state_partition_specs(), is_leaf=lambda x: isinstance(x, P)
+        )
+        for leaf, spec in zip(jax.tree.leaves(restored), specs):
+            assert isinstance(leaf, jax.Array)
+            assert isinstance(leaf.sharding, NamedSharding)
+            assert leaf.sharding.spec == spec
+    assert sharding.current_mesh() is None
+
+
 def test_collective_parser_on_real_hlo():
     """Lower an all-reduce-containing program; parser must count its bytes."""
     mesh = make_mesh(1, 1, 1)

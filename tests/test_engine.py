@@ -164,10 +164,11 @@ def test_superstep_run_round_consumes_state():
 
 
 def test_superstep_rejects_bad_configs():
-    trainer, data = _trainer(m=2, h=4, streaming_fragments=2, compression="int8",
-                             error_feedback=False)
-    with pytest.raises(ValueError):
-        SuperstepEngine(trainer, data, 1)  # streaming + compression unsupported
+    # streaming + compression is rejected at config construction (both
+    # engines and the checkpoint manifest's sync_mode must agree)
+    with pytest.raises(ValueError, match="compression"):
+        _trainer(m=2, h=4, streaming_fragments=2, compression="int8",
+                 error_feedback=False)
     # chunk length is free for DP but pinned to sync_every for DiLoCo
     tr_dp, data = _trainer(m=1, h=4, data_parallel=True)
     SuperstepEngine(tr_dp, data, 1, chunk=6)
@@ -186,6 +187,76 @@ def test_run_round_rejects_window_crossing_sync_boundary():
         engine.run_round(state, start=2, length=4)  # crosses step 4
     state, _ = engine.run_round(state, start=2, length=2)  # up to the boundary
     state, _ = engine.run_round(state, start=4, length=3)  # tail, no boundary
+
+
+# ---------------------------------------------------------------------------
+# bitwise resume equivalence (checkpoint at a NON-H-aligned step)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+def test_superstep_resume_is_bitwise_exact(mode, tmp_path):
+    """train(8) == train(5) + checkpoint + restore + train(3) — bitwise —
+    under the superstep engine, for every sync mode.  The restore step (5)
+    deliberately does not land on the H=4 boundary, so the resumed engine
+    must split its first round at the boundary (engine.round_bounds) and the
+    prefetch cursor / on-device datagen must re-align to the absolute step."""
+    from repro.checkpoint import Checkpointer
+
+    kw = dict(MODES[mode])
+    m = kw.pop("m")
+    steps, h, seqs, k = 8, 4, 1, 5
+
+    tr_a, data = _trainer(m=m, h=h, **kw)
+    ref = tr_a.init_state(jax.random.PRNGKey(0))
+    ref, _ = SuperstepEngine(tr_a, data, seqs).run(ref, steps)
+
+    tr_b, _ = _trainer(m=m, h=h, **kw)
+    st = tr_b.init_state(jax.random.PRNGKey(0))
+    st, _ = SuperstepEngine(tr_b, data, seqs).run(st, k)
+    Checkpointer(str(tmp_path), trainer=tr_b).save(st, k)
+
+    tr_c, _ = _trainer(m=m, h=h, **kw)  # fresh "process"
+    restored, start = Checkpointer(str(tmp_path), trainer=tr_c).restore()
+    assert start == k
+    out, _ = SuperstepEngine(tr_c, data, seqs).run(restored, steps, start=start)
+
+    assert int(out["step"]) == int(ref["step"]) == steps
+    for key in ref:
+        for a, b in zip(jax.tree.leaves(out[key]), jax.tree.leaves(ref[key])):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"mode={mode} state[{key!r}] not bitwise equal",
+            )
+
+
+def test_token_file_resume_realigns_prefetch_cursor(tmp_path):
+    """File-backed resume: the RoundPrefetcher is keyed on the absolute
+    (start, length) window, so a resumed engine reads exactly the sequences
+    the uninterrupted run would have."""
+    from repro.checkpoint import Checkpointer
+
+    rng = np.random.default_rng(0)
+    path = tmp_path / "tokens.bin"
+    rng.integers(0, 250, size=8000).astype(np.uint16).tofile(path)
+    data = TokenFileSource(str(path), seq_len=128)
+
+    tr_a, _ = _trainer(m=2, h=4)
+    ref = tr_a.init_state(jax.random.PRNGKey(0))
+    ref, _ = SuperstepEngine(tr_a, data, 1).run(ref, 8)
+
+    tr_b, _ = _trainer(m=2, h=4)
+    st = tr_b.init_state(jax.random.PRNGKey(0))
+    eng_b = SuperstepEngine(tr_b, data, 1)
+    st, _ = eng_b.run(st, 5)
+    eng_b.close()
+    Checkpointer(str(tmp_path / "ck"), trainer=tr_b).save(st, 5)
+
+    tr_c, _ = _trainer(m=2, h=4)
+    restored, start = Checkpointer(str(tmp_path / "ck"), trainer=tr_c).restore()
+    out, _ = SuperstepEngine(tr_c, data, 1).run(restored, 8, start=start)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 # ---------------------------------------------------------------------------

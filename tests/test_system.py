@@ -149,6 +149,108 @@ def test_elastic_resize_preserves_global_model():
     assert all(l.shape[0] == 1 for l in jax.tree.leaves(shrunk["inner_params"]))
 
 
+def test_per_step_template_free_resume_is_bitwise(tmp_path):
+    """Exact resume on the per-step engine through the NEW restore path:
+    no live template — structure from abstract_state(), values bitwise from
+    disk, leaves device_put."""
+    from repro.checkpoint import Checkpointer
+
+    trainer, data = _mk(m=2, h=4, steps=20)
+
+    def advance(trainer, state, t0, t1):
+        inner = jax.jit(trainer.inner_step)
+        for t in range(t0, t1):
+            state, _ = inner(state, data.global_batch(t, 2, 2))
+            if (t + 1) % 4 == 0:
+                state = trainer.outer_sync(state)
+        return state
+
+    ref = advance(trainer, trainer.init_state(jax.random.PRNGKey(0)), 0, 16)
+
+    state = advance(trainer, trainer.init_state(jax.random.PRNGKey(0)), 0, 10)
+    Checkpointer(str(tmp_path), trainer=trainer).save(state, 10)
+
+    tr2, _ = _mk(m=2, h=4, steps=20)  # fresh "process"
+    restored, step = Checkpointer(str(tmp_path), trainer=tr2).restore()
+    assert step == 10
+    resumed = advance(tr2, restored, 10, 16)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_switching_engine_per_step_to_superstep(tmp_path):
+    """A checkpoint written by the per-step loop resumes under the superstep
+    engine (the state dict is engine-agnostic) and lands within engine
+    tolerance of the pure per-step run."""
+    from repro.checkpoint import Checkpointer
+    from repro.core.superstep import SuperstepEngine
+
+    trainer, data = _mk(m=2, h=4, steps=8)
+    inner = jax.jit(trainer.inner_step)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    ref = trainer.init_state(jax.random.PRNGKey(0))
+    for t in range(8):
+        ref, _ = inner(ref, data.global_batch(t, 2, 2))
+        if (t + 1) % 4 == 0:
+            ref = trainer.outer_sync(ref)
+        if t + 1 == 5:  # non-H-aligned switch point
+            Checkpointer(str(tmp_path), trainer=trainer).save(ref, 5)
+
+    tr2, _ = _mk(m=2, h=4, steps=8)
+    restored, start = Checkpointer(str(tmp_path), trainer=tr2).restore()
+    engine = SuperstepEngine(tr2, data, 2)
+    out, _ = engine.run(restored, 8, start=start)
+    assert int(out["step"]) == 8
+    for a, b in zip(jax.tree.leaves(out["global_params"]),
+                    jax.tree.leaves(ref["global_params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+def test_train_driver_elastic_resume(tmp_path):
+    """Driver-level elastic restart: checkpoint at M=2, resume the CLI run
+    with --replicas 4 — restore resizes to the new M and training proceeds."""
+    from repro.launch.train import build_argparser, make_run, train_loop
+
+    base = ["--arch", "tiny-t0", "--algorithm", "diloco", "--sync-every", "4",
+            "--batch-tokens", "2048", "--seq-len", "128", "--warmup", "2",
+            "--eval-every", "0", "--log-every", "0",
+            "--checkpoint-dir", str(tmp_path)]
+    args = build_argparser().parse_args(base + ["--replicas", "2", "--steps", "4"])
+    cfg, trainer, data, steps = make_run(args)
+    train_loop(args, trainer, data, steps, quiet=True)  # final save at step 4
+
+    args2 = build_argparser().parse_args(
+        base + ["--replicas", "4", "--steps", "8", "--resume"])
+    cfg, trainer4, data, steps = make_run(args2)
+    state, history = train_loop(args2, trainer4, data, steps, quiet=True)
+    assert trainer4.M == 4
+    assert int(state["step"]) == 8
+    assert all(l.shape[0] == 4 for l in jax.tree.leaves(state["inner_params"]))
+    assert len(history) == 4  # steps 5..8 ran after the resume
+
+
+def test_train_driver_resume_at_end_is_noop(tmp_path):
+    """Resuming a finished run must not crash or publish a lying manifest."""
+    from repro.checkpoint import Checkpointer
+    from repro.launch.train import build_argparser, make_run, train_loop
+
+    base = ["--arch", "tiny-t0", "--algorithm", "diloco", "--replicas", "2",
+            "--sync-every", "4", "--steps", "4", "--batch-tokens", "2048",
+            "--seq-len", "128", "--warmup", "2", "--eval-every", "0",
+            "--log-every", "0", "--checkpoint-dir", str(tmp_path)]
+    args = build_argparser().parse_args(base)
+    _, trainer, data, steps = make_run(args)
+    train_loop(args, trainer, data, steps, quiet=True)
+
+    args2 = build_argparser().parse_args(base + ["--resume"])
+    _, trainer2, data, steps = make_run(args2)
+    state, history = train_loop(args2, trainer2, data, steps, quiet=True)
+    assert history == []
+    assert int(state["step"]) == 4
+    ck = Checkpointer(str(tmp_path), trainer=trainer2)
+    assert ck.latest_step() == 4  # re-saved at the state's true step
+
+
 def test_train_driver_cli_smoke(tmp_path):
     from repro.launch.train import build_argparser, make_run, train_loop
 
