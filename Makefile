@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test bench-smoke bench resume-smoke
+.PHONY: verify test bench-smoke bench resume-smoke sweep-smoke
 
 verify: test bench-smoke
 
@@ -23,3 +23,9 @@ bench:
 # bitwise-equal to the uninterrupted run (exact-resume guarantee)
 resume-smoke:
 	$(PY) scripts/resume_smoke.py
+
+# scaling-law sweep drill: reduced (N x M) grid with a simulated mid-sweep
+# kill — rerun must skip ledger-complete cells, resume the rest from their
+# checkpoints, then fit the ledger (results/SWEEP_smoke.jsonl + FITS_smoke.json)
+sweep-smoke:
+	$(PY) scripts/sweep_smoke.py

@@ -1,5 +1,10 @@
 """Prime the benchmark cache: run the full experiment grid sequentially.
 
+This feeds the paper-table harness (``benchmarks.tables``) via the
+``results/bench_runs.json`` cache.  The ledger-producing scaling-law sweep
+with per-cell checkpoint resume is ``repro.launch.sweep`` (+
+``repro.launch.fit``); prefer it for new grids.
+
   PYTHONPATH=src python -m benchmarks.sweep            # everything missing
 """
 from __future__ import annotations

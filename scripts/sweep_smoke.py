@@ -1,0 +1,91 @@
+"""Sweep smoke: reduced (N x M) grid end to end, with a simulated kill.
+
+Drives the scaling-law sweep subsystem the way CI needs it proven:
+
+1. run the ``smoke`` grid but stop after 2 cells (a "killed" sweep);
+2. re-run the full grid — the 2 completed cells MUST be skipped via the
+   ledger, the remaining 4 run to completion;
+3. drop one cell's ledger record while keeping its checkpoints — the
+   re-run must resume that cell from its final checkpoint (zero training
+   steps) and reproduce the recorded eval loss bitwise;
+4. fit the ledger (``repro.launch.fit``) and sanity-check the fitted laws.
+
+Artifacts land under ``results/`` (SWEEP_smoke.jsonl + FITS_smoke.json).
+Exit code is non-zero on any violation.
+
+  PYTHONPATH=src python scripts/sweep_smoke.py
+"""
+import json
+import math
+import os
+import shutil
+import sys
+
+from repro.configs import get_sweep
+from repro.launch.fit import fit_ledger
+from repro.launch.sweep import _json_safe, read_ledger, run_sweep
+
+LEDGER = os.path.join("results", "SWEEP_smoke.jsonl")
+CKPT_ROOT = os.path.join("results", "sweep_smoke_ckpt")
+FITS = os.path.join("results", "FITS_smoke.json")
+
+
+def main() -> int:
+    sweep = get_sweep("smoke")
+    for p in (LEDGER, FITS):
+        if os.path.exists(p):
+            os.remove(p)
+    shutil.rmtree(CKPT_ROOT, ignore_errors=True)
+
+    # 1. killed sweep: only 2 of the 6 cells complete
+    part = run_sweep(sweep, LEDGER, CKPT_ROOT, max_cells=2, quiet=True)
+    ran = [r for r in part if not r["skipped"]]
+    assert len(ran) == 2, f"expected 2 cells before the kill, ran {len(ran)}"
+    assert len(read_ledger(LEDGER)) == 2
+
+    # 2. re-run: completed cells skip via the ledger, the rest run
+    full = run_sweep(sweep, LEDGER, CKPT_ROOT, quiet=True)
+    skipped = [r["cell"] for r in full if r["skipped"]]
+    assert skipped == [r["cell"] for r in ran], (
+        f"rerun must skip exactly the pre-kill cells: {skipped}")
+    done = read_ledger(LEDGER)
+    assert len(done) == len(full), f"{len(done)} ledger cells != {len(full)} grid cells"
+
+    # 3. cell-level checkpoint resume: forget one cell's record (keep its
+    # checkpoints) — the re-run must restore at the final step and
+    # reproduce the recorded eval bitwise, with zero training steps
+    victim = full[-1]["cell"]
+    old = done[victim]
+    with open(LEDGER) as f:
+        lines = [ln for ln in f if json.loads(ln)["cell"] != victim]
+    with open(LEDGER, "w") as f:
+        f.writelines(lines)
+    rerun = run_sweep(sweep, LEDGER, CKPT_ROOT, quiet=True)
+    new = next(r["record"] for r in rerun if r["cell"] == victim)
+    assert not next(r for r in rerun if r["cell"] == victim)["skipped"]
+    assert new["start_step"] == new["steps"], (
+        f"cell did not resume from its final checkpoint: "
+        f"start={new['start_step']} steps={new['steps']}")
+    assert new["final_eval"] == old["final_eval"], (
+        f"resumed eval {new['final_eval']!r} != recorded {old['final_eval']!r}")
+
+    # 4. fit the ledger
+    fits = fit_ledger(list(read_ledger(LEDGER).values()), restarts=8)
+    fits["ledger"] = LEDGER
+    with open(FITS, "w") as f:
+        json.dump(_json_safe(fits), f, indent=1, allow_nan=False)
+    laws = fits["power_laws"]
+    assert laws, "no power laws fit"
+    for k, v in laws.items():
+        assert math.isfinite(v["A"]) and math.isfinite(v["alpha"]), (k, v)
+    assert "alpha" in fits["joint"], fits["joint"]
+    assert fits["headline"]["diloco_vs_dp"], "missing DiLoCo-vs-DP headline rows"
+
+    print(f"sweep smoke OK: {len(done)} cells, kill/rerun skipped "
+          f"{len(skipped)}, checkpoint-resume bitwise-equal, "
+          f"{len(laws)} power laws + joint fit -> {FITS}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

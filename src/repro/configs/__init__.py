@@ -18,6 +18,7 @@ from repro.configs.base import (  # noqa: F401
     TrainConfig,
     shape_by_name,
 )
+from repro.configs.sweeps import SWEEPS, SweepSpec, get_sweep  # noqa: F401
 
 _ASSIGNED = {
     "deepseek-moe-16b": "deepseek_moe_16b",

@@ -1,0 +1,117 @@
+"""Named experiment-grid presets for the scaling-law sweep driver.
+
+A ``SweepSpec`` is the cross product of the paper's grid axes — model size
+N (via arch names), replicas M, sync cadence H, global batch B, and the
+outer-sync mode — plus the per-cell training recipe.  ``repro.launch.sweep``
+expands a spec into concrete cells, runs each on the superstep engine, and
+records them in a JSONL ledger that ``repro.launch.fit`` turns into the
+paper's fitted scaling laws.
+
+Modes (the Streaming-DiLoCo axis rides along as a first-class grid value):
+
+* ``dp``        — Data-Parallel baseline (M forced to 1, no outer step)
+* ``diloco``    — paper Algorithm 1, full-precision outer sync
+* ``int8``      — int8-compressed outer deltas with error feedback
+* ``streaming`` — Streaming-DiLoCo fragment sync (P fragments per round)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+def default_lr(d_model: int) -> float:
+    """Fixed per-width inner-lr rule (the paper sweeps lr per scale; a CPU
+    box cannot — 1/sqrt(width) is the standard mu-P-flavored default, same
+    rule as benchmarks/common.py)."""
+    return 3e-3 * (64 / d_model) ** 0.5
+
+
+@dataclass(frozen=True)
+class SweepSpec:
+    """One named sweep: grid axes (tuples) x shared per-cell recipe."""
+
+    name: str
+    # --- grid axes ------------------------------------------------------
+    archs: tuple = ("tiny-t0", "tiny-t1")
+    modes: tuple = ("dp", "diloco")
+    replicas: tuple = (1, 2)
+    sync_every: tuple = (5,)
+    batch_tokens: tuple = (2048,)
+    # --- per-cell recipe ------------------------------------------------
+    seq_len: int = 128
+    steps: int = 0                   # 0 -> budget_mult * N / B (constant rule)
+    budget_mult: float = 5.0         # reduced-Chinchilla D = 5N on CPU
+    min_steps: int = 10
+    lr: float = 0.0                  # 0 -> default_lr(d_model)
+    outer_lr: float = 0.7
+    outer_momentum: float = 0.9
+    nesterov: bool = True
+    warmup_frac: float = 0.1         # warmup = ceil(frac * steps)
+    seed: int = 0
+    eval_batches: int = 4
+    eval_seqs: int = 16              # fixed M-independent eval batch
+    streaming_fragments: int = 2     # P when mode == "streaming"
+    checkpoint_every: int = 0        # 0 = final checkpoint only
+    engine: str = "superstep"
+
+    def replace(self, **kw) -> "SweepSpec":
+        return dataclasses.replace(self, **kw)
+
+
+SWEEPS = {
+    # CI smoke: reduced (N x M) grid, a handful of steps per cell — proves
+    # the ledger / per-cell-resume / fit loop end to end in minutes.
+    "smoke": SweepSpec(
+        name="smoke",
+        archs=("tiny-t0", "tiny-t1"),
+        modes=("dp", "diloco"),
+        replicas=(1, 2),
+        sync_every=(4,),
+        batch_tokens=(1024,),
+        seq_len=64,
+        steps=8,
+        lr=3e-3,
+        warmup_frac=0.25,
+        eval_batches=2,
+        eval_seqs=8,
+        checkpoint_every=4,
+    ),
+    # CPU-feasible ladder: the benchmark grid as a ledger-producing sweep
+    # (tiny family, all four sync modes, the paper's M / H / B axes reduced).
+    "ladder": SweepSpec(
+        name="ladder",
+        archs=("tiny-t0", "tiny-t1", "tiny-t2"),
+        modes=("dp", "diloco", "int8", "streaming"),
+        replicas=(1, 2, 4),
+        sync_every=(5, 15),
+        batch_tokens=(2048, 8192),
+        seq_len=128,
+        budget_mult=5.0,
+        checkpoint_every=50,
+    ),
+    # The paper's actual grid (Tables 4-13): Chinchilla family, M in
+    # {1,2,4,8}, H=30, B swept around the per-scale optimum, D=20N.
+    # Definition of done for the full reproduction; needs accelerators.
+    "paper": SweepSpec(
+        name="paper",
+        archs=("chinchilla-35m", "chinchilla-90m", "chinchilla-180m",
+               "chinchilla-330m", "chinchilla-550m", "chinchilla-1.3b",
+               "chinchilla-2.4b"),
+        modes=("dp", "diloco"),
+        replicas=(1, 2, 4, 8),
+        sync_every=(30,),
+        batch_tokens=(2 ** 16, 2 ** 17, 2 ** 18, 2 ** 19),
+        seq_len=2048,
+        budget_mult=20.0,
+        warmup_frac=0.05,
+        checkpoint_every=500,
+    ),
+}
+
+
+def get_sweep(name: str) -> SweepSpec:
+    try:
+        return SWEEPS[name]
+    except KeyError:
+        raise KeyError(f"unknown sweep {name!r}; known: {sorted(SWEEPS)}") from None

@@ -53,9 +53,22 @@ def bandwidth_grid(lo=0.1e9, hi=1000e9, steps=50):
 
 
 def snap_to_grid(w, grid=None):
-    g = bandwidth_grid() if grid is None else grid
-    idx = np.searchsorted(g, w)
-    return g[min(idx, len(g) - 1)]
+    """Snap bandwidth(s) to the NEAREST grid point in log space.
+
+    The grid is geometric (Table-6 calibration note: the paper's simulator
+    snaps to a ~1.21x-per-step geometric grid), so "nearest" must be
+    measured in log space — midpoints between grid points are geometric
+    means, not arithmetic ones.  Out-of-range inputs clamp to the grid
+    ends (the old searchsorted version snapped interior values upward and
+    silently truncated values above the max).
+    """
+    g = np.asarray(bandwidth_grid() if grid is None else grid, float)
+    w = np.asarray(w, float)
+    if np.any(w <= 0):
+        raise ValueError(f"bandwidth must be positive, got {w}")
+    idx = np.argmin(np.abs(np.log(g) - np.log(w)[..., None]), axis=-1)
+    out = g[idx]
+    return float(out) if np.isscalar(idx) or out.ndim == 0 else out
 
 
 def table6(bits_per_param=8, compression_ratio=1.0) -> list:

@@ -5,9 +5,15 @@ Communication: bandwidth-optimal all-reduce of N params over R nodes in a
 (W, ε) network takes 2·N_bits/W·(1−1/R) + ε  [Patarasuk & Yuan 2009].
 
 Data-Parallel:   all-reduce over the CROSS-datacenter network every step.
-DiLoCo M=1:      same per-step all-reduce + outer all-reduce every H steps.
+DiLoCo M=1:      same per-step all-reduce; the outer step is LOCAL (a
+                 single replica group has nobody to exchange deltas with —
+                 the per-step all-reduce already keeps every chip in sync),
+                 so no extra communication is billed.
 DiLoCo M≥2:      per-step all-reduce stays INSIDE a datacenter (R/M nodes,
-                 high-bandwidth net); outer all-reduce crosses every H steps.
+                 high-bandwidth net); the outer all-reduce crosses every H
+                 steps ACROSS THE M REPLICA GROUPS (Appendix A: each group
+                 pre-reduces internally, so the cross-datacenter collective
+                 has M participants, not R).
 """
 from __future__ import annotations
 
@@ -63,11 +69,16 @@ def train_time(
     if algorithm == "dp":
         comm = allreduce_time(n_params, r, cross_net) * steps
     elif m_replicas == 1:
-        per_step = allreduce_time(n_params, r, cross_net)
-        comm = per_step * steps * (1.0 + 1.0 / sync_every)
+        # single replica group: the per-step all-reduce spans the same R
+        # chips as DP (over the cross net), and the outer all-reduce over
+        # M=1 groups is a no-op — allreduce_time(·, 1, ·) == 0 below, so
+        # this branch is the m>=2 formula with within_net := cross_net
+        comm = allreduce_time(n_params, r, cross_net) * steps
     else:
+        # Appendix A: inner syncs stay within each group's datacenter; the
+        # outer sync is an all-reduce across the M replica groups
         inner = allreduce_time(n_params, max(r // m_replicas, 1), within_net) * steps
-        outer = allreduce_time(n_params, r, cross_net) * steps / sync_every
+        outer = allreduce_time(n_params, m_replicas, cross_net) * steps / sync_every
         comm = inner + outer
     return {
         "steps": steps,

@@ -1,0 +1,249 @@
+"""Fit the paper's scaling laws from a sweep ledger (§6, Tables 7-13).
+
+Consumes the JSONL ledger written by ``repro.launch.sweep`` and emits one
+versioned JSON artifact with:
+
+* independent power laws  L(N) = A·N^α  per (mode, M)        (Tables 7-9)
+* the joint power law     L(N,M) = A·N^α·M^β                 (Table 10)
+* quadratic-in-log2(B) optimal-batch interpolation, and the growth of the
+  optimal batch with M                                        (§6.1, Finding 3)
+* the four parametric L(N,M) forms (Huber-on-log, multi-restart, largest-N
+  holdout when there is enough data)                          (§6.5, Table 13)
+* headline artifacts: DiLoCo-vs-DP loss at the fixed token budget, and the
+  simulated wall-clock / compute-utilization overlay per cell (Appendix A)
+
+  PYTHONPATH=src python -m repro.launch.fit --ledger results/SWEEP_smoke.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.core import scaling_laws as sl
+from repro.launch.sweep import _json_safe, read_ledger
+
+FIT_SCHEMA = 1
+
+
+# ---------------------------------------------------------------------------
+# Ledger -> tidy cells
+# ---------------------------------------------------------------------------
+
+
+def _cells(records) -> list:
+    out = []
+    for rec in records:
+        s = rec["spec"]
+        out.append({
+            "cell": rec["cell"],
+            "mode": s["mode"],
+            "arch": s["arch"],
+            "n": float(rec["n_params"]),
+            "m": int(s["m"]),
+            "h": int(s["h"]),
+            "b": int(s["batch_tokens"]),
+            "tokens": int(rec["tokens"]),
+            "eval": float(rec["final_eval"]),
+            "sim": rec.get("sim", {}),
+        })
+    return out
+
+
+def _tuned(cells, keys=("mode", "m", "n")) -> dict:
+    """Min eval loss per group — the paper fits at tuned hyperparameters,
+    so within a group the best (H, B) cell represents the scale."""
+    best = {}
+    for c in cells:
+        k = tuple(c[kk] for kk in keys)
+        if k not in best or c["eval"] < best[k]["eval"]:
+            best[k] = c
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Fits
+# ---------------------------------------------------------------------------
+
+
+def _power_laws(cells) -> dict:
+    out = {}
+    tuned = _tuned(cells)
+    groups = {}
+    for (mode, m, n), c in tuned.items():
+        groups.setdefault((mode, m), []).append((n, c["eval"]))
+    for (mode, m), pts in sorted(groups.items()):
+        if len({n for n, _ in pts}) < 2:
+            continue
+        pts.sort()
+        n = [p[0] for p in pts]
+        y = [p[1] for p in pts]
+        A, alpha = sl.fit_power_law(n, y)
+        out[f"{mode}_m{m}"] = {
+            "A": A, "alpha": alpha,
+            "n_points": len(pts),
+            "residual": sl.residual(y, sl.predict_power_law(A, alpha, n)),
+        }
+    return out
+
+
+def _diloco_points(cells):
+    tuned = _tuned([c for c in cells if c["mode"] == "diloco"])
+    pts = sorted(tuned.values(), key=lambda c: (c["n"], c["m"]))
+    n = np.array([c["n"] for c in pts])
+    m = np.array([c["m"] for c in pts])
+    y = np.array([c["eval"] for c in pts])
+    return n, m, y
+
+
+def _joint(cells) -> dict:
+    n, m, y = _diloco_points(cells)
+    if len(n) < 3 or len(set(n)) < 2 or len(set(m)) < 2:
+        return {"skipped": f"need >=2 N and >=2 M (have {len(set(n))} N, {len(set(m))} M)"}
+    A, alpha, beta = sl.fit_joint_power_law(n, m, y)
+    return {
+        "A": A, "alpha": alpha, "beta": beta,
+        "n_points": int(len(n)),
+        "residual": sl.residual(y, sl.predict_joint(A, alpha, beta, n, m)),
+    }
+
+
+def _optimal_batch(cells) -> dict:
+    """Quadratic-in-log2(B) optimum per (mode, M, N); then the growth of
+    the optimum with M (the paper's Finding 3: bigger M -> bigger B_opt)."""
+    groups = {}
+    for c in cells:
+        groups.setdefault((c["mode"], c["m"], c["n"]), []).append(c)
+    optima = {}
+    for (mode, m, n), cs in sorted(groups.items()):
+        byb = _tuned(cs, keys=("b",))
+        if len(byb) < 3:
+            continue  # a quadratic needs >= 3 batch sizes
+        bs = sorted(k[0] for k in byb)
+        losses = [byb[(b,)]["eval"] for b in bs]
+        optima[f"{mode}_m{m}_n{n:.3g}"] = {
+            "mode": mode, "m": m, "n": n,
+            "b_opt": sl.quadratic_log2_optimum(bs, losses),
+            "b_grid": bs,
+        }
+    out = {"per_cell": optima}
+    # B_opt(M) power law over DiLoCo optima at fixed N
+    byn = {}
+    for o in optima.values():
+        if o["mode"] == "diloco":
+            byn.setdefault(o["n"], []).append((o["m"], o["b_opt"]))
+    growth = {}
+    for n, pts in sorted(byn.items()):
+        if len(pts) < 2:
+            continue
+        pts.sort()
+        A, gamma = sl.fit_power_law([p[0] for p in pts], [p[1] for p in pts])
+        growth[f"n{n:.3g}"] = {"A": A, "gamma": gamma, "m_grid": [p[0] for p in pts]}
+    out["growth_with_m"] = growth
+    return out
+
+
+def _parametric(cells, restarts: int, seed: int = 0) -> dict:
+    n, m, y = _diloco_points(cells)
+    out = {}
+    if len(n) < 3 or len(set(n)) < 2:
+        return {"skipped": f"need >=3 DiLoCo points over >=2 N (have {len(n)})"}
+    holdout = None
+    if len(n) >= 6 and len(set(n)) >= 3:
+        holdout = n >= sorted(set(n))[-1]  # paper §6.5: hold out the largest scale
+    n_train = int(len(n) - (holdout.sum() if holdout is not None else 0))
+    for form, (_, k) in sl.PARAMETRIC_FORMS.items():
+        if n_train <= k:
+            out[form] = {"skipped": f"{n_train} training points cannot constrain {k} params"}
+            continue
+        params, train_obj, sel = sl.fit_parametric(
+            form, n, m, y, restarts=restarts, seed=seed, holdout_mask=holdout)
+        pred = sl.parametric_predict(form, params, n, m)
+        out[form] = {
+            "params": [float(p) for p in params],
+            "train_obj": train_obj,
+            "holdout_residual": sel if holdout is not None else None,
+            "residual": sl.residual(y, pred),
+        }
+    return out
+
+
+def _headline(cells) -> dict:
+    """The paper's headline artifacts from the raw cells."""
+    tuned = _tuned(cells)
+    # DiLoCo vs DP eval loss at the (fixed) token budget, per scale
+    vs = []
+    ns = sorted({c["n"] for c in cells})
+    for n in ns:
+        dp = tuned.get(("dp", 1, n))
+        if dp is None:
+            continue
+        row = {"n": n, "arch": dp["arch"], "tokens": dp["tokens"], "dp": dp["eval"]}
+        for (mode, m, nn), c in sorted(tuned.items()):
+            if nn == n and mode != "dp":
+                row[f"{mode}_m{m}"] = c["eval"]
+                row[f"{mode}_m{m}_minus_dp"] = c["eval"] - dp["eval"]
+        vs.append(row)
+    # simulated wall-clock / CU overlay (Appendix A): loss vs idealized time
+    overlay = [
+        {
+            "cell": c["cell"], "mode": c["mode"], "m": c["m"], "h": c["h"],
+            "n": c["n"], "b": c["b"], "eval": c["eval"],
+            "sim_total_s": c["sim"].get("wallclock", {}).get("total_s"),
+            "sim_comm_s": c["sim"].get("wallclock", {}).get("comm_s"),
+            "cu": c["sim"].get("cu_at_medium_bw"),
+        }
+        for c in sorted(cells, key=lambda c: (c["n"], c["mode"], c["m"], c["h"], c["b"]))
+    ]
+    return {"diloco_vs_dp": vs, "wallclock_overlay": overlay}
+
+
+def fit_ledger(records, *, restarts: int = 32, seed: int = 0) -> dict:
+    """All fits from a list of ledger records (see module docstring)."""
+    cells = _cells(records)
+    return {
+        "schema": FIT_SCHEMA,
+        "n_cells": len(cells),
+        "power_laws": _power_laws(cells),
+        "joint": _joint(cells),
+        "optimal_batch": _optimal_batch(cells),
+        "parametric": _parametric(cells, restarts, seed),
+        "headline": _headline(cells),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--ledger", required=True, help="SWEEP_*.jsonl ledger path")
+    ap.add_argument("--out", default="",
+                    help="output JSON (default: ledger path with SWEEP_ -> "
+                         "FITS_ and .jsonl -> .json)")
+    ap.add_argument("--restarts", type=int, default=32,
+                    help="multi-restart count for the parametric fits")
+    args = ap.parse_args()
+    records = list(read_ledger(args.ledger).values())
+    if not records:
+        raise SystemExit(f"no ledger records in {args.ledger}")
+    fits = fit_ledger(records, restarts=args.restarts)
+    fits["ledger"] = args.ledger
+    out = args.out or args.ledger.replace("SWEEP_", "FITS_").replace(".jsonl", ".json")
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(_json_safe(fits), f, indent=1, allow_nan=False)
+    print(f"fit {fits['n_cells']} cells -> {out}")
+    laws = fits["power_laws"]
+    for k in sorted(laws):
+        v = laws[k]
+        print(f"  L(N)|{k}: A={v['A']:.3f} alpha={v['alpha']:.4f} "
+              f"res={v['residual']:.4f} ({v['n_points']} pts)")
+    j = fits["joint"]
+    if "alpha" in j:
+        print(f"  L(N,M): A={j['A']:.3f} alpha={j['alpha']:.4f} beta={j['beta']:.4f} "
+              f"res={j['residual']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

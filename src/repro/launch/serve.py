@@ -19,7 +19,7 @@ from repro.configs import get_config, get_smoke_config
 from repro.models import build_model
 
 
-def main():
+def build_argparser():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tiny-t1")
     ap.add_argument("--smoke", action="store_true", help="use the reduced config")
@@ -27,25 +27,32 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
 
+
+def run_serve(args, *, quiet=False) -> dict:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = model.init(key)
+    # independent streams: reusing one key would correlate the params with
+    # the prompt tokens and the vision/audio frontend embeddings
+    k_params, k_tokens, k_embeds, k_frames = jax.random.split(
+        jax.random.PRNGKey(args.seed), 4)
+    params = model.init(k_params)
     max_len = args.prompt_len + args.gen + (cfg.n_frontend_tokens if cfg.family == "vlm" else 0)
 
-    batch = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    batch = {"tokens": jax.random.randint(k_tokens, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
     if cfg.family == "vlm":
-        batch["embeds"] = jax.random.normal(key, (args.batch, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
+        batch["embeds"] = jax.random.normal(k_embeds, (args.batch, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
     if cfg.is_encdec:
-        batch["frames"] = jax.random.normal(key, (args.batch, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
+        batch["frames"] = jax.random.normal(k_frames, (args.batch, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
 
     cache = model.init_cache(args.batch, max_len)
     t0 = time.time()
     prefill = jax.jit(lambda p, b, c: model.prefill(p, b, c))
     logits, cache = prefill(params, batch, cache)
-    print(f"prefill {args.batch}x{args.prompt_len}: {time.time()-t0:.2f}s")
+    jax.block_until_ready(logits)
+    prefill_s = time.time() - t0
+    prefill_tok_s = args.batch * args.prompt_len / max(prefill_s, 1e-9)
 
     if cfg.is_encdec:
         enc_out, cache = cache["enc_out"], cache["kv"]
@@ -64,11 +71,28 @@ def main():
         logits, cache = decode(params, db, cache, jnp.asarray(npast + i))
         tok = jnp.argmax(logits[:, -1], -1)[:, None]
         outs.append(tok)
-    dt = time.time() - t0
+    jax.block_until_ready(tok)
+    decode_s = time.time() - t0
+    decode_tok_s = args.gen * args.batch / max(decode_s, 1e-9)
     gen = jnp.concatenate(outs, axis=1)
-    print(f"decoded {args.gen} tokens x {args.batch} streams in {dt:.2f}s "
-          f"({args.gen*args.batch/dt:.1f} tok/s)")
-    print("sample:", gen[0, :16].tolist())
+    if not quiet:
+        print(f"prefill {args.batch}x{args.prompt_len}: {prefill_s:.2f}s "
+              f"({prefill_tok_s:.1f} tok/s)")
+        print(f"decoded {args.gen} tokens x {args.batch} streams in {decode_s:.2f}s "
+              f"({decode_tok_s:.1f} tok/s)")
+        print("sample:", gen[0, :16].tolist())
+    return {
+        "prefill_s": prefill_s,
+        "prefill_tok_s": prefill_tok_s,
+        "decode_s": decode_s,
+        "decode_tok_s": decode_tok_s,
+        "prompt_tokens": batch["tokens"],
+        "tokens": gen,
+    }
+
+
+def main():
+    run_serve(build_argparser().parse_args())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,273 @@
+"""Scaling-law sweep driver: run an (N x M x H x B x sync-mode) grid.
+
+The paper's headline contribution is that DiLoCo's eval loss and optimal
+hyperparameters follow scaling laws in (N, M) that can be fit and
+extrapolated (§6).  This driver produces the data those fits consume: it
+expands a named ``SweepSpec`` grid (``repro.configs.sweeps``) into cells,
+runs each cell on the compiled superstep engine via
+``repro.launch.train.run_experiment``, and appends one record per cell to a
+versioned, append-only JSONL ledger under ``results/``.
+
+Fault tolerance is two-level:
+
+* **cell-level**: a completed cell's ledger record is durable (fsync'd
+  append); re-running the sweep skips every cell already in the ledger.
+* **step-level**: each cell checkpoints into its own directory (the PR-2
+  elastic checkpoint subsystem), so a cell killed mid-run resumes from its
+  last checkpoint instead of step 0.
+
+  PYTHONPATH=src python -m repro.launch.sweep --grid smoke
+  PYTHONPATH=src python -m repro.launch.fit --ledger results/SWEEP_smoke.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import math
+import os
+import shutil
+import time
+
+from repro.configs import get_config, get_sweep
+from repro.configs.sweeps import SweepSpec, default_lr
+from repro.launch.train import ExperimentConfig, run_experiment
+from repro.models import build_model
+
+LEDGER_SCHEMA = 1
+
+
+# ---------------------------------------------------------------------------
+# Grid expansion
+# ---------------------------------------------------------------------------
+
+
+def _resolve_steps(sweep: SweepSpec, arch: str, batch_tokens: int) -> int:
+    if sweep.steps:
+        return sweep.steps
+    n_params = build_model(get_config(arch)).param_count()
+    return max(int(sweep.budget_mult * n_params / batch_tokens), sweep.min_steps)
+
+
+def expand_grid(sweep: SweepSpec) -> list:
+    """Cross product of the grid axes, normalized so equivalent cells get
+    identical specs: dp ignores the M / H / outer-optimizer axes (emitted
+    once per (arch, B) with M=1), streaming resolves its fragment count.
+    Cheapest-first (by N then steps) so partial sweeps are useful."""
+    cells = []
+    seen = set()
+    for arch in sweep.archs:
+        for batch_tokens in sweep.batch_tokens:
+            steps = _resolve_steps(sweep, arch, batch_tokens)
+            lr = sweep.lr or default_lr(get_config(arch).d_model)
+            for mode in sweep.modes:
+                for m in sweep.replicas:
+                    for h in sweep.sync_every:
+                        spec = {
+                            "arch": arch,
+                            "mode": mode,
+                            "m": m if mode != "dp" else 1,
+                            "h": h if mode != "dp" else 1,
+                            "batch_tokens": batch_tokens,
+                            "seq_len": sweep.seq_len,
+                            "steps": steps,
+                            "lr": round(lr, 8),
+                            "outer_lr": sweep.outer_lr if mode != "dp" else 0.0,
+                            "outer_momentum": sweep.outer_momentum if mode != "dp" else 0.0,
+                            "nesterov": sweep.nesterov if mode != "dp" else False,
+                            "streaming_fragments": (
+                                min(sweep.streaming_fragments, h)
+                                if mode == "streaming" else 0
+                            ),
+                            "seed": sweep.seed,
+                            "engine": sweep.engine,
+                        }
+                        cid = cell_id(spec)
+                        if cid not in seen:  # dp collapses the M/H axes
+                            seen.add(cid)
+                            cells.append(spec)
+    cells.sort(key=lambda s: (get_config(s["arch"]).d_model, s["steps"], s["m"]))
+    return cells
+
+
+def cell_id(spec: dict) -> str:
+    """Stable content hash of a cell spec (independent of the sweep name, so
+    identical cells dedupe across grids sharing a ledger)."""
+    return hashlib.sha1(
+        json.dumps(spec, sort_keys=True).encode()
+    ).hexdigest()[:12]
+
+
+def cell_config(sweep: SweepSpec, spec: dict, checkpoint_root: str) -> ExperimentConfig:
+    """The ExperimentConfig that runs one grid cell, with its own
+    checkpoint directory for step-level resume."""
+    ckpt_dir = os.path.join(checkpoint_root, cell_id(spec)) if checkpoint_root else ""
+    return ExperimentConfig(
+        arch=spec["arch"],
+        algorithm="dp" if spec["mode"] == "dp" else "diloco",
+        engine=spec["engine"],
+        replicas=spec["m"],
+        sync_every=spec["h"],
+        outer_lr=spec["outer_lr"],
+        outer_momentum=spec["outer_momentum"],
+        nesterov=spec["nesterov"],
+        lr=spec["lr"],
+        warmup=max(1, math.ceil(sweep.warmup_frac * spec["steps"])),
+        batch_tokens=spec["batch_tokens"],
+        seq_len=spec["seq_len"],
+        steps=spec["steps"],
+        seed=spec["seed"],
+        compression="int8" if spec["mode"] == "int8" else "none",
+        streaming_fragments=spec["streaming_fragments"],
+        eval_batches=sweep.eval_batches,
+        eval_seqs=sweep.eval_seqs,
+        checkpoint_dir=ckpt_dir,
+        checkpoint_every=sweep.checkpoint_every,
+        resume=bool(ckpt_dir),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Ledger
+# ---------------------------------------------------------------------------
+
+
+def read_ledger(path: str) -> dict:
+    """Completed cells by id.  Append-only JSONL: a crash mid-append can
+    leave one truncated trailing line — tolerate and drop it (the cell will
+    simply re-run, resuming from its checkpoints)."""
+    done = {}
+    if not os.path.exists(path):
+        return done
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue  # truncated tail from a killed writer
+            if rec.get("schema") == LEDGER_SCHEMA and "cell" in rec:
+                done[rec["cell"]] = rec
+    return done
+
+
+def _json_safe(obj):
+    """Non-finite floats -> null: the stdlib's default NaN/Infinity tokens
+    are invalid JSON and would make the ledger unparseable to strict
+    consumers (jq, JSON.parse, ...)."""
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return None
+    if isinstance(obj, dict):
+        return {k: _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_safe(v) for v in obj]
+    return obj
+
+
+def append_record(path: str, rec: dict) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(_json_safe(rec), allow_nan=False) + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+
+
+# ---------------------------------------------------------------------------
+# Driving
+# ---------------------------------------------------------------------------
+
+
+def run_sweep(
+    sweep: SweepSpec,
+    ledger_path: str,
+    checkpoint_root: str = "",
+    *,
+    max_cells: int = 0,
+    force: bool = False,
+    clean: bool = False,
+    quiet: bool = False,
+) -> list:
+    """Run every grid cell not already in the ledger.
+
+    Returns ``[{"cell", "spec", "skipped", "record"}, ...]`` in grid order.
+    ``max_cells`` stops after that many cells actually ran (0 = no limit);
+    ``clean`` removes a cell's checkpoint directory once its record is
+    durable in the ledger.
+    """
+    cells = expand_grid(sweep)
+    done = {} if force else read_ledger(ledger_path)
+    out, ran = [], 0
+    for i, spec in enumerate(cells):
+        cid = cell_id(spec)
+        if cid in done:
+            if not quiet:
+                print(f"[{i + 1}/{len(cells)}] {cid} skip (in ledger): {spec}")
+            out.append({"cell": cid, "spec": spec, "skipped": True,
+                        "record": done[cid]})
+            continue
+        if max_cells and ran >= max_cells:
+            break
+        t0 = time.time()
+        config = cell_config(sweep, spec, checkpoint_root)
+        result = run_experiment(config, quiet=True)
+        rec = _json_safe({
+            "schema": LEDGER_SCHEMA,
+            "cell": cid,
+            "sweep": sweep.name,
+            "spec": spec,
+            **result.to_record(),
+        })
+        append_record(ledger_path, rec)
+        if clean and config.checkpoint_dir:
+            shutil.rmtree(config.checkpoint_dir, ignore_errors=True)
+        ran += 1
+        if not quiet:
+            resumed = f" (resumed@{result.start_step})" if result.start_step else ""
+            print(f"[{i + 1}/{len(cells)}] {cid} eval={result.final_eval:.4f} "
+                  f"sim={result.sim['wallclock']['total_s']:.2f}s "
+                  f"({time.time() - t0:.1f}s){resumed}: {spec}", flush=True)
+        out.append({"cell": cid, "spec": spec, "skipped": False, "record": rec})
+    return out
+
+
+def build_argparser():
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--grid", default="smoke",
+                    help="named SweepSpec from repro.configs.sweeps")
+    ap.add_argument("--ledger", default="",
+                    help="JSONL ledger path (default results/SWEEP_<grid>.jsonl)")
+    ap.add_argument("--checkpoint-root", default="",
+                    help="per-cell checkpoint root "
+                         "(default results/sweep_<grid>_ckpt; 'none' disables)")
+    ap.add_argument("--max-cells", type=int, default=0,
+                    help="stop after running this many cells (0 = all)")
+    ap.add_argument("--force", action="store_true",
+                    help="re-run cells even if already in the ledger")
+    ap.add_argument("--clean", action="store_true",
+                    help="delete a cell's checkpoints once its record is durable")
+    return ap
+
+
+def main():
+    args = build_argparser().parse_args()
+    sweep = get_sweep(args.grid)
+    ledger = args.ledger or os.path.join("results", f"SWEEP_{sweep.name}.jsonl")
+    ckpt_root = args.checkpoint_root or os.path.join(
+        "results", f"sweep_{sweep.name}_ckpt")
+    if ckpt_root == "none":
+        ckpt_root = ""
+    cells = expand_grid(sweep)
+    print(f"sweep {sweep.name}: {len(cells)} cells -> {ledger}")
+    results = run_sweep(sweep, ledger, ckpt_root,
+                        max_cells=args.max_cells, force=args.force,
+                        clean=args.clean)
+    ran = sum(1 for r in results if not r["skipped"])
+    print(f"done: {ran} ran, {sum(1 for r in results if r['skipped'])} skipped, "
+          f"{len(cells) - len(results)} remaining")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -32,12 +33,139 @@ import numpy as np
 from repro import sharding
 from repro.checkpoint import Checkpointer
 from repro.configs import DiLoCoConfig, OptimizerConfig, TrainConfig, get_config
-from repro.core import elastic, streaming
+from repro.core import compute_util, elastic, streaming, wallclock
 from repro.core.diloco import make_trainer
 from repro.core.superstep import SuperstepEngine
 from repro.data import SyntheticLM, TokenFileSource
 from repro.launch.mesh import make_mesh
 from repro.models import build_model
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentConfig:
+    """One fully-specified training experiment (a sweep cell).
+
+    Field names mirror the CLI argparse dests, so an instance can drive
+    ``make_run``/``train_loop`` anywhere an ``args`` namespace is expected;
+    ``ExperimentConfig.from_args`` converts a parsed namespace.
+    """
+
+    arch: str = "tiny-t1"
+    algorithm: str = "diloco"        # dp | diloco
+    engine: str = "superstep"        # superstep | per-step
+    replicas: int = 1                # M
+    sync_every: int = 30             # H
+    outer_lr: float = 0.7
+    outer_momentum: float = 0.9
+    nesterov: bool = True
+    lr: float = 3e-3
+    warmup: int = 100
+    batch_tokens: int = 8192         # B
+    seq_len: int = 256
+    steps: int = 0                   # 0 -> Chinchilla D=20N (x overtrain)
+    overtrain: float = 1.0
+    seed: int = 0
+    mesh: str = "1,1,1"
+    compression: str = "none"        # none | int8
+    streaming_fragments: int = 0
+    tokens_file: str = ""
+    eval_every: int = 0
+    eval_batches: int = 4
+    eval_seqs: int = 0               # final-eval batch size; 0 -> B / seq_len
+    #                                  (M-independent so cells are comparable)
+    checkpoint_dir: str = ""
+    checkpoint_every: int = 0
+    resume: bool = False
+    log_every: int = 0
+    straggler_rate: float = 0.0
+    metrics_out: str = ""
+
+    @classmethod
+    def from_args(cls, args) -> "ExperimentConfig":
+        return cls(**{
+            f.name: getattr(args, f.name)
+            for f in dataclasses.fields(cls) if hasattr(args, f.name)
+        })
+
+    def replace(self, **kw) -> "ExperimentConfig":
+        return dataclasses.replace(self, **kw)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """What one experiment produced: measured losses plus the idealized
+    wall-clock / compute-utilization simulation for the same (N, M, H, B)
+    cell (paper Appendix A / §5.1)."""
+
+    config: ExperimentConfig
+    arch: str
+    n_params: int
+    steps: int
+    start_step: int                  # >0 when the cell resumed mid-run
+    tokens: int
+    final_eval: float
+    final_eval_sem: float
+    final_train: float
+    runtime_s: float
+    history: list
+    sim: dict
+
+    def to_record(self) -> dict:
+        """Flat JSON-serializable form (the sweep-ledger payload)."""
+        return {
+            "config": self.config.to_dict(),
+            "arch": self.arch,
+            "n_params": self.n_params,
+            "steps": self.steps,
+            "start_step": self.start_step,
+            "tokens": self.tokens,
+            "final_eval": self.final_eval,
+            "final_eval_sem": self.final_eval_sem,
+            "final_train": self.final_train,
+            "runtime_s": self.runtime_s,
+            "sim": self.sim,
+        }
+
+
+def simulate_cell(n_params: int, tokens: int, config: ExperimentConfig) -> dict:
+    """Idealized wall-clock + compute-utilization for one cell.
+
+    ``wallclock.train_time`` gives the Appendix-A end-to-end seconds; the
+    Table-6 CU model adds the utilization at the default cross-DC bandwidth
+    (int8 outer compression halves the outer payload).
+    """
+    m = config.replicas if config.algorithm == "diloco" else 1
+    h = config.sync_every if config.algorithm == "diloco" else 1
+    wall = wallclock.train_time(
+        n_params, tokens, config.batch_tokens,
+        algorithm=config.algorithm, m_replicas=m, sync_every=h,
+    )
+    r = wallclock.num_chips(config.batch_tokens)
+    step_time = wallclock.compute_time(n_params, config.batch_tokens, r)
+    ratio = 2.0 if config.compression == "int8" else 1.0
+    if config.algorithm == "diloco" and m > 1:
+        # outer sync: all-reduce across the M replica groups every H steps
+        cu = compute_util.compute_utilization(
+            n_params / ratio, step_time, wallclock.MEDIUM.bandwidth,
+            sync_every=h, r_nodes=m,
+        )
+    else:
+        # every-step all-reduce over all R chips (DP; DiLoCo M=1 outer is
+        # local); r_nodes=1 means no collective at all -> CU = 1.0, matching
+        # wallclock's comm_s == 0 for the same cell
+        cu = compute_util.compute_utilization(
+            n_params, step_time, wallclock.MEDIUM.bandwidth,
+            sync_every=1, r_nodes=r,
+        )
+    return {
+        "wallclock": wall,
+        "step_time_s": step_time,
+        "cu_at_medium_bw": cu,
+        "outer_payload_ratio": ratio,
+    }
 
 
 def build_argparser():
@@ -51,6 +179,8 @@ def build_argparser():
     ap.add_argument("--sync-every", type=int, default=30)
     ap.add_argument("--outer-lr", type=float, default=0.7)
     ap.add_argument("--outer-momentum", type=float, default=0.9)
+    ap.add_argument("--no-nesterov", dest="nesterov", action="store_false",
+                    help="plain SGD(+momentum) outer updates")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--warmup", type=int, default=100)
     ap.add_argument("--batch-tokens", type=int, default=8192)
@@ -90,6 +220,7 @@ def make_run(args):
         sync_every=args.sync_every,
         outer_lr=args.outer_lr,
         outer_momentum=args.outer_momentum,
+        nesterov=getattr(args, "nesterov", True),
         data_parallel=args.algorithm == "dp",
         compression=args.compression,
         streaming_fragments=args.streaming_fragments,
@@ -110,12 +241,17 @@ def _straggler_weights(args, rng, m):
     return elastic.participation_weights(mask)
 
 
-def _eval_record(args, data, state, eval_step, seqs_per_replica):
+def _eval_stats(n_batches, data, state, eval_step, eval_seqs):
     evals = [
-        float(eval_step(state, data.batch(10_000 + i, 0, 1, seqs_per_replica, eval=True)))
-        for i in range(args.eval_batches)
+        float(eval_step(state, data.batch(10_000 + i, 0, 1, eval_seqs, eval=True)))
+        for i in range(n_batches)
     ]
-    return float(np.mean(evals))
+    return float(np.mean(evals)), float(np.std(evals) / np.sqrt(max(len(evals), 1)))
+
+
+def _eval_record(args, data, state, eval_step, seqs_per_replica):
+    mean, _ = _eval_stats(args.eval_batches, data, state, eval_step, seqs_per_replica)
+    return mean
 
 
 def train_loop(args, trainer, data, steps, *, mesh=None, rules=None, quiet=False):
@@ -253,29 +389,71 @@ def _per_step_loop(args, trainer, data, steps, state, start, ckpt, *,
     return state, history
 
 
-def main():
-    args = build_argparser().parse_args()
-    cfg, trainer, data, steps = make_run(args)
-    r, d, mdl = (int(x) for x in args.mesh.split(","))
-    print(f"arch={cfg.name} N={build_model(cfg).param_count()/1e6:.2f}M params "
-          f"algo={args.algorithm} M={trainer.M} H={args.sync_every} steps={steps} "
-          f"engine={args.engine}")
+def run_experiment(config: ExperimentConfig, *, quiet: bool = True) -> ExperimentResult:
+    """Run one fully-specified experiment end to end; return its result.
+
+    This is the reusable core of the CLI (and the unit the sweep driver
+    schedules): build trainer + data, run ``train_loop`` on the configured
+    engine (with checkpoint/resume when ``config.checkpoint_dir`` is set),
+    evaluate the final state on a fixed-size held-out batch (independent of
+    M, so losses are comparable across cells), and attach the Appendix-A
+    wall-clock / Table-6 CU simulation for the same cell.
+    """
+    cfg, trainer, data, steps = make_run(config)
+    n_params = trainer.model.param_count()
+    eval_seqs = config.eval_seqs or max(1, config.batch_tokens // config.seq_len)
+
+    t0 = time.time()
+    r, d, mdl = (int(x) for x in config.mesh.split(","))
     if r * d * mdl > 1:
         mesh = make_mesh(r, d, mdl)
         with sharding.set_mesh(mesh), sharding.use_rules(dict(sharding.DEFAULT_RULES)):
-            state, history = train_loop(args, trainer, data, steps, mesh=mesh)
+            state, history = train_loop(config, trainer, data, steps, mesh=mesh,
+                                        quiet=quiet)
+            final_eval, sem = _eval_stats(config.eval_batches, data, state,
+                                          jax.jit(trainer.eval_step), eval_seqs)
     else:
-        state, history = train_loop(args, trainer, data, steps)
+        state, history = train_loop(config, trainer, data, steps, quiet=quiet)
+        final_eval, sem = _eval_stats(config.eval_batches, data, state,
+                                      jax.jit(trainer.eval_step), eval_seqs)
+    runtime_s = time.time() - t0
+
+    final_step = int(np.asarray(state["step"]))
+    losses = [h["loss"] for h in history[-10:]]
+    return ExperimentResult(
+        config=config,
+        arch=cfg.name,
+        n_params=n_params,
+        steps=steps,
+        start_step=final_step - len(history),
+        tokens=steps * config.batch_tokens,
+        final_eval=final_eval,
+        final_eval_sem=sem,
+        final_train=float(np.mean(losses)) if losses else float("nan"),
+        runtime_s=runtime_s,
+        history=history,
+        sim=simulate_cell(n_params, steps * config.batch_tokens, config),
+    )
+
+
+def main():
+    args = build_argparser().parse_args()
+    config = ExperimentConfig.from_args(args)
+    cfg, trainer, _, steps = make_run(config)  # banner from the same budget rule
+    print(f"arch={cfg.name} N={trainer.model.param_count()/1e6:.2f}M params "
+          f"algo={config.algorithm} M={trainer.M} H={config.sync_every} "
+          f"steps={steps} engine={config.engine}")
+    result = run_experiment(config, quiet=False)
+    history = result.history
     if history:
         final = history[-1]
-        floor = data.entropy_floor() if hasattr(data, "entropy_floor") else float("nan")
-        print(f"final: loss={final['loss']:.4f} eval_nll={final.get('eval_nll', float('nan')):.4f} "
-              f"(source entropy floor ~{floor:.4f})")
+        print(f"final: loss={final['loss']:.4f} eval_nll={result.final_eval:.4f} "
+              f"sim_total={result.sim['wallclock']['total_s']:.1f}s")
     else:
-        print(f"nothing to do: resumed at step {int(np.asarray(state['step']))} "
+        print(f"nothing to do: resumed at step {result.start_step} "
               f">= steps ({steps})")
-    if args.metrics_out:
-        with open(args.metrics_out, "w") as f:
+    if config.metrics_out:
+        with open(config.metrics_out, "w") as f:
             json.dump(history, f)
 
 

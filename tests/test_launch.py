@@ -86,6 +86,30 @@ def test_zero1_opt_specs_differ_from_param_specs():
     assert any("data" in str(s) for s in m_leaves)       # moments sharded (ZeRO-1)
 
 
+def test_serve_splits_prng_keys_and_reports_both_phases():
+    """serve must not reuse one PRNG key for params AND prompts (the old
+    bug correlated them), and must report prefill + decode throughput."""
+    from repro.launch.serve import build_argparser, run_serve
+
+    args = build_argparser().parse_args(
+        ["--arch", "tiny-t0", "--batch", "2", "--prompt-len", "8", "--gen", "4"])
+    out = run_serve(args, quiet=True)
+    assert out["tokens"].shape == (2, 5)  # first greedy token + 4 decoded
+    for k in ("prefill_s", "prefill_tok_s", "decode_s", "decode_tok_s"):
+        assert np.isfinite(out[k]) and out[k] > 0
+    # key splitting: the served prompts must come from the dedicated
+    # split-off key, NOT from the root key that also initialized the params
+    key = jax.random.PRNGKey(args.seed)
+    _, k_tokens, _, _ = jax.random.split(key, 4)
+    from repro.configs import get_config
+
+    cfg = get_config("tiny-t0")
+    expect = jax.random.randint(k_tokens, (2, 8), 0, cfg.vocab_size)
+    reused = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    np.testing.assert_array_equal(np.asarray(out["prompt_tokens"]), np.asarray(expect))
+    assert not np.array_equal(np.asarray(out["prompt_tokens"]), np.asarray(reused))
+
+
 def test_collective_traffic_bf16_counting():
     from repro.launch.roofline import collective_traffic
 

@@ -182,3 +182,52 @@ def test_power_law_fit_roundtrip(loga, alpha, seed):
     A2, a2 = sl.fit_power_law(n, y)
     assert abs(a2 - alpha) < 5e-3
     assert abs(np.log(A2) - loga) < 0.1
+
+
+@settings(**SETTINGS)
+@given(
+    loga=st.floats(1.0, 4.0),
+    alpha=st.floats(-0.2, -0.01),
+    beta=st.floats(0.0, 0.05),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_joint_power_law_fit_roundtrip(loga, alpha, beta, seed):
+    """Round-trip (A, alpha, beta): f(N,M) = A·N^α·M^β with noise on the
+    paper's (N, M) grid shape must be recovered by the joint fit."""
+    rng = np.random.default_rng(seed)
+    A = float(np.exp(loga))
+    N, M = np.meshgrid(np.geomspace(1e7, 1e10, 7), [1, 2, 4, 8])
+    y = A * N ** alpha * M ** beta * np.exp(rng.normal(0, 1e-4, N.shape))
+    A2, a2, b2 = sl.fit_joint_power_law(N.ravel(), M.ravel(), y.ravel())
+    assert abs(a2 - alpha) < 5e-3
+    assert abs(b2 - beta) < 5e-3
+    assert abs(np.log(A2) - loga) < 0.1
+    # and the fit's own residual metric reports near-zero error
+    pred = sl.predict_joint(A2, a2, b2, N.ravel(), M.ravel())
+    assert sl.residual(y.ravel(), pred) < 1e-3
+
+
+@settings(**SETTINGS)
+@given(
+    eps_scale=st.floats(1e-4, 0.05),
+    c=st.floats(0.1, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_residual_metric_on_table13_shaped_fits(eps_scale, c, seed):
+    """res(y, ŷ) = mean |log y − log ŷ| (§6.3) on Table-13-shaped data:
+    exact on constructed log-perturbations, symmetric, scale-invariant,
+    and bounded by the triangle inequality under further perturbation."""
+    rng = np.random.default_rng(seed)
+    # the paper's published L(N, M) surface (Tables 4/13 shape: 7 N x 4 M)
+    y = np.concatenate([sl.PAPER_TABLE4_LOSS[f"diloco_m{m}"] for m in (1, 2, 4, 8)])
+    eps = rng.normal(0, eps_scale, y.shape)
+    y_hat = y * np.exp(eps)
+    res = sl.residual(y, y_hat)
+    assert abs(res - np.mean(np.abs(eps))) < 1e-9
+    assert abs(sl.residual(y_hat, y) - res) < 1e-12          # symmetry
+    assert abs(sl.residual(c * y, c * y_hat) - res) < 1e-9   # scale invariance
+    assert sl.residual(y, y) == 0.0
+    # triangle inequality: perturbing ŷ further moves res by at most mean|δ|
+    delta = rng.normal(0, eps_scale, y.shape)
+    res2 = sl.residual(y, y_hat * np.exp(delta))
+    assert res2 <= res + np.mean(np.abs(delta)) + 1e-9

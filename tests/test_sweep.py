@@ -1,0 +1,272 @@
+"""Scaling-law sweep subsystem: grid expansion, ledger, per-cell resume,
+run_experiment, and the fit stage."""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_sweep
+from repro.configs.sweeps import SweepSpec
+from repro.launch.fit import fit_ledger
+from repro.launch.sweep import (
+    append_record,
+    cell_config,
+    cell_id,
+    expand_grid,
+    read_ledger,
+    run_sweep,
+)
+from repro.launch.train import ExperimentConfig, run_experiment, simulate_cell
+
+TINY = SweepSpec(
+    name="test",
+    archs=("tiny-t0",),
+    modes=("dp", "diloco"),
+    replicas=(1,),
+    sync_every=(2,),
+    batch_tokens=(512,),
+    seq_len=64,
+    steps=4,
+    lr=3e-3,
+    warmup_frac=0.25,
+    eval_batches=2,
+    eval_seqs=4,
+    checkpoint_every=2,
+)
+
+
+# ---------------------------------------------------------------------------
+# Grid expansion / cell identity
+# ---------------------------------------------------------------------------
+
+
+def test_smoke_grid_expansion_collapses_dp_axes():
+    cells = expand_grid(get_sweep("smoke"))
+    # 2 archs x (1 dp + 2 diloco M values): dp ignores the M axis
+    assert len(cells) == 6
+    dp = [c for c in cells if c["mode"] == "dp"]
+    assert len(dp) == 2
+    assert all(c["m"] == 1 and c["h"] == 1 and c["outer_lr"] == 0.0 for c in dp)
+    # ids are stable content hashes and unique
+    ids = [cell_id(c) for c in cells]
+    assert len(set(ids)) == len(ids)
+    assert ids == [cell_id(c) for c in expand_grid(get_sweep("smoke"))]
+
+
+def test_streaming_cells_clamp_fragments_to_h():
+    sweep = TINY.replace(modes=("streaming",), sync_every=(2, 4),
+                         streaming_fragments=3)
+    cells = expand_grid(sweep)
+    frags = {c["h"]: c["streaming_fragments"] for c in cells}
+    assert frags == {2: 2, 4: 3}
+    cfg = cell_config(sweep, cells[0], "")
+    assert cfg.algorithm == "diloco" and cfg.streaming_fragments == cells[0]["streaming_fragments"]
+
+
+def test_paper_grid_is_the_papers_axes():
+    cells = expand_grid(get_sweep("paper"))
+    assert {c["m"] for c in cells if c["mode"] == "diloco"} == {1, 2, 4, 8}
+    assert len({c["arch"] for c in cells}) == 7
+    assert all(c["h"] in (1, 30) for c in cells)
+
+
+# ---------------------------------------------------------------------------
+# Ledger
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_roundtrip_and_truncated_tail(tmp_path):
+    path = str(tmp_path / "ledger.jsonl")
+    recs = [
+        {"schema": 1, "cell": "aaa", "final_eval": 1.0},
+        {"schema": 1, "cell": "bbb", "final_eval": 2.0},
+    ]
+    for r in recs:
+        append_record(path, r)
+    # simulate a crash mid-append: truncated trailing line
+    with open(path, "a") as f:
+        f.write('{"schema": 1, "cell": "ccc", "final_ev')
+    done = read_ledger(path)
+    assert set(done) == {"aaa", "bbb"}
+    assert done["bbb"]["final_eval"] == 2.0
+    # unknown schema versions are ignored, not misread
+    append_record(path, {"schema": 99, "cell": "ddd"})
+    assert set(read_ledger(path)) == {"aaa", "bbb"}
+
+
+def test_ledger_never_emits_bare_nan_tokens(tmp_path):
+    """A zero-new-steps resume records final_train=NaN; the ledger must
+    stay strict JSON (NaN/Infinity tokens break jq / JSON.parse)."""
+    path = str(tmp_path / "ledger.jsonl")
+    append_record(path, {"schema": 1, "cell": "eee",
+                         "final_train": float("nan"),
+                         "sim": {"x": float("inf"), "ok": [1.0, float("-inf")]}})
+    raw = open(path).read()
+    assert "NaN" not in raw and "Infinity" not in raw
+    rec = read_ledger(path)["eee"]
+    assert rec["final_train"] is None
+    assert rec["sim"]["x"] is None and rec["sim"]["ok"] == [1.0, None]
+
+
+# ---------------------------------------------------------------------------
+# Driving (real training on a minuscule grid)
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_runs_records_and_skips(tmp_path):
+    ledger = str(tmp_path / "SWEEP_test.jsonl")
+    out = run_sweep(TINY, ledger, str(tmp_path / "ckpt"), quiet=True)
+    assert len(out) == 2 and not any(r["skipped"] for r in out)
+    for r in out:
+        rec = r["record"]
+        assert rec["schema"] == 1
+        assert rec["steps"] == 4 and rec["tokens"] == 4 * 512
+        assert math.isfinite(rec["final_eval"])
+        assert rec["sim"]["wallclock"]["total_s"] > 0
+        assert 0 < rec["sim"]["cu_at_medium_bw"] <= 1
+        assert rec["config"]["arch"] == "tiny-t0"
+    # a second run skips everything via the ledger
+    again = run_sweep(TINY, ledger, str(tmp_path / "ckpt"), quiet=True)
+    assert all(r["skipped"] for r in again)
+    # ledger did not grow
+    assert len(read_ledger(ledger)) == 2
+
+
+def test_cell_checkpoint_resume_reproduces_eval_bitwise(tmp_path):
+    """Kill-and-rerun inside a cell: with the ledger record gone but the
+    cell's checkpoints intact, the rerun restores at the final step (zero
+    training) and reproduces the recorded eval loss bitwise."""
+    sweep = TINY.replace(modes=("diloco",))
+    ledger = str(tmp_path / "SWEEP_test.jsonl")
+    first = run_sweep(sweep, ledger, str(tmp_path / "ckpt"), quiet=True)
+    (rec,) = [r["record"] for r in first]
+    assert rec["start_step"] == 0
+    os.remove(ledger)
+    second = run_sweep(sweep, ledger, str(tmp_path / "ckpt"), quiet=True)
+    (rec2,) = [r["record"] for r in second]
+    assert rec2["start_step"] == rec2["steps"] == 4  # no steps re-trained
+    assert rec2["final_eval"] == rec["final_eval"]
+
+
+def test_sweep_cell_m1_h1_matches_dp_eval():
+    """Acceptance: a DiLoCo cell with M=1, H=1 and an identity outer step
+    (eta=1, mu=0, no Nesterov) is algebraically the DP recursion; its eval
+    loss must match the plain DP train path to float rounding."""
+    base = dict(arch="tiny-t0", batch_tokens=512, seq_len=64, steps=8,
+                lr=3e-3, warmup=2, eval_batches=2, eval_seqs=4, seed=0)
+    dp = run_experiment(ExperimentConfig(algorithm="dp", **base))
+    dl = run_experiment(ExperimentConfig(
+        algorithm="diloco", replicas=1, sync_every=1,
+        outer_lr=1.0, outer_momentum=0.0, nesterov=False, **base))
+    assert dp.steps == dl.steps == 8
+    np.testing.assert_allclose(dl.final_eval, dp.final_eval, rtol=1e-4, atol=1e-4)
+    # per-step train losses track each other too
+    np.testing.assert_allclose(
+        [h["loss"] for h in dl.history], [h["loss"] for h in dp.history],
+        rtol=1e-3, atol=1e-3)
+
+
+def test_run_experiment_result_record_is_json_serializable():
+    cfg = ExperimentConfig(arch="tiny-t0", algorithm="dp", batch_tokens=512,
+                           seq_len=64, steps=2, warmup=1, eval_batches=1,
+                           eval_seqs=2)
+    res = run_experiment(cfg)
+    rec = res.to_record()
+    rt = json.loads(json.dumps(rec))
+    assert rt["config"]["arch"] == "tiny-t0"
+    assert rt["n_params"] == res.n_params > 0
+    assert rt["start_step"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Simulation attachment
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_cell_diloco_beats_dp_on_wallclock():
+    """At scale, the cell simulation must reproduce the paper's core claim:
+    DiLoCo M>=2 needs far less cross-DC comm time than DP and idles less."""
+    kw = dict(batch_tokens=2 ** 20, seq_len=2048, steps=0)
+    n, tokens = int(1e9), int(20e9)
+    dp = simulate_cell(n, tokens, ExperimentConfig(algorithm="dp", **kw))
+    dl = simulate_cell(n, tokens, ExperimentConfig(
+        algorithm="diloco", replicas=4, sync_every=30, **kw))
+    assert dl["wallclock"]["comm_s"] < dp["wallclock"]["comm_s"]
+    assert dl["cu_at_medium_bw"] > dp["cu_at_medium_bw"]
+    int8 = simulate_cell(n, tokens, ExperimentConfig(
+        algorithm="diloco", replicas=4, sync_every=30, compression="int8", **kw))
+    assert int8["cu_at_medium_bw"] >= dl["cu_at_medium_bw"]
+    assert int8["outer_payload_ratio"] == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Fit stage (synthetic ledgers — no training)
+# ---------------------------------------------------------------------------
+
+
+def _synth_record(arch, n, mode, m, b, eval_loss, h=30, tokens=0):
+    spec = {"arch": arch, "mode": mode, "m": m, "h": h if mode != "dp" else 1,
+            "batch_tokens": b, "seq_len": 128, "steps": 100, "lr": 1e-3,
+            "outer_lr": 0.7 if mode != "dp" else 0.0,
+            "outer_momentum": 0.9 if mode != "dp" else 0.0,
+            "nesterov": mode != "dp", "streaming_fragments": 0, "seed": 0,
+            "engine": "superstep"}
+    return {"schema": 1, "cell": cell_id(spec), "spec": spec,
+            "n_params": n, "steps": 100, "tokens": tokens or 100 * b,
+            "final_eval": eval_loss, "final_eval_sem": 0.0,
+            "final_train": eval_loss, "runtime_s": 1.0,
+            "sim": {"wallclock": {"total_s": 1.0, "comm_s": 0.1},
+                    "cu_at_medium_bw": 0.9}}
+
+
+def test_fit_ledger_recovers_joint_power_law():
+    A, alpha, beta = 19.0, -0.098, 0.012
+    recs = []
+    for i, n in enumerate(np.geomspace(3e7, 3e9, 5)):
+        for m in (1, 2, 4, 8):
+            loss = A * n ** alpha * m ** beta
+            recs.append(_synth_record(f"a{i}", n, "diloco", m, 2048, loss))
+        recs.append(_synth_record(f"a{i}", n, "dp", 1, 2048, A * n ** alpha))
+    fits = fit_ledger(recs, restarts=8)
+    assert fits["n_cells"] == len(recs)
+    j = fits["joint"]
+    assert abs(j["alpha"] - alpha) < 1e-3 and abs(j["beta"] - beta) < 1e-3
+    assert j["residual"] < 1e-6
+    pl = fits["power_laws"]
+    assert abs(pl["diloco_m8"]["alpha"] - alpha) < 1e-3
+    assert abs(pl["dp_m1"]["alpha"] - alpha) < 1e-3
+    # parametric form 1 is the same family -> near-zero residual
+    p1 = fits["parametric"]["AN^aM^b"]
+    assert p1["residual"] < 1e-2
+    rows = fits["headline"]["diloco_vs_dp"]
+    assert len(rows) == 5 and all("diloco_m2_minus_dp" in r for r in rows)
+
+
+def test_fit_ledger_optimal_batch_growth_with_m():
+    """B_opt from the quadratic-in-log2(B) fit must grow with M (Finding 3)
+    and the growth itself must fit a power law in M."""
+    recs = []
+    n = 1e8
+    for m in (1, 2, 4, 8):
+        b_opt = 2 ** (8 + np.log2(m))  # optimum doubles with M
+        for b in (64, 256, 1024, 4096):
+            loss = 2.5 + 0.02 * (np.log2(b) - np.log2(b_opt)) ** 2
+            recs.append(_synth_record("a", n, "diloco", m, b, loss))
+    fits = fit_ledger(recs, restarts=4)
+    per = fits["optimal_batch"]["per_cell"]
+    opts = {v["m"]: v["b_opt"] for v in per.values()}
+    assert opts[1] < opts[2] < opts[4] < opts[8]
+    growth = fits["optimal_batch"]["growth_with_m"]
+    (g,) = growth.values()
+    assert abs(g["gamma"] - 1.0) < 0.05  # doubles with M -> exponent ~1
+
+
+def test_fit_ledger_skips_underdetermined_fits():
+    recs = [_synth_record("a", 1e8, "diloco", 1, 2048, 3.0)]
+    fits = fit_ledger(recs, restarts=2)
+    assert fits["power_laws"] == {}
+    assert "skipped" in fits["joint"]
+    assert "skipped" in fits["parametric"]
+    assert fits["optimal_batch"]["per_cell"] == {}
