@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test bench-smoke bench resume-smoke sweep-smoke
+.PHONY: verify test bench-smoke bench resume-smoke sweep-smoke bench-sweep bench-sweep-smoke
 
 verify: test bench-smoke
 
@@ -29,3 +29,13 @@ resume-smoke:
 # checkpoints, then fit the ledger (results/SWEEP_smoke.jsonl + FITS_smoke.json)
 sweep-smoke:
 	$(PY) scripts/sweep_smoke.py
+
+# sweep-throughput bench: sequential vs shared-executable vs cell-stacked
+# on the 6-cell lr/seed grid; --check asserts stacked >= sequential
+# cells/sec, executable reuse, and bitwise-identical ledgers
+bench-sweep-smoke:
+	$(PY) -m benchmarks.bench_sweep --grids smoke-stack --check \
+	    --out results/BENCH_sweep_smoke.json
+
+bench-sweep:
+	$(PY) -m benchmarks.bench_sweep --check --warm-cache-grid smoke-stack

@@ -1,0 +1,274 @@
+"""Sweep-throughput benchmark: sequential vs shared-executable vs stacked.
+
+Times three executions of the same grid (fresh ledger each time) and pins
+the result in ``results/BENCH_sweep.json``:
+
+* ``sequential`` — the pre-PR-4 behavior: every cell runs alone AND builds
+  its own executables (``jitcache.sharing(False)``), so each cell pays a
+  full trace + XLA compile even when only a scalar hyperparameter differs.
+* ``shared`` — cells still run one at a time, but executables are cached
+  process-wide by static shape signature: each distinct cell *shape*
+  compiles exactly once (asserted via the compile counter below).
+* ``stacked`` — ``plan_groups`` + ``CellBatchEngine``: shape-compatible
+  cells run as ONE vmapped donated executable; per-cell ledger records are
+  bitwise-identical to the sequential path (asserted under ``--check``).
+
+Compile counting uses ``jax.monitoring``'s backend-compile duration events
+— actual XLA compilations, not Python-side cache misses.  The persistent
+compilation cache is deliberately NOT enabled here (a warm disk cache
+would hide exactly the cost being measured); a separate ``warm_rerun``
+phase measures it explicitly: the same grid re-run in a subprocess against
+the cache directory the first subprocess populated.
+
+  PYTHONPATH=src python -m benchmarks.bench_sweep                # full
+  PYTHONPATH=src python -m benchmarks.bench_sweep --check \\
+      --grids smoke-stack --out results/BENCH_sweep_smoke.json   # CI smoke
+
+Reading ``BENCH_sweep.json``: one row per (grid, path) with wall-clock
+``time_to_ledger_s`` (expand -> every record durable), ``cells_per_s``,
+and ``backend_compiles``; ``speedup_stacked`` / ``speedup_shared`` compare
+against the sequential row.  ``stack_groups`` lists the planner's
+partition so a regression in grouping is visible in the artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.monitoring
+
+from repro.configs import get_sweep
+from repro.core import jitcache
+from repro.launch.sweep import (
+    cell_id,
+    expand_grid,
+    plan_groups,
+    read_ledger,
+    run_sweep,
+)
+
+# ladder-lite: the ladder recipe cut to CPU-bench size, with a seed axis so
+# every one of the four sync modes forms stackable pairs.
+LADDER_LITE = (
+    get_sweep("ladder").replace(
+        name="ladder-lite",
+        archs=("tiny-t0", "tiny-t1"),
+        modes=("dp", "diloco", "int8", "streaming"),
+        replicas=(1, 2),
+        sync_every=(4,),
+        batch_tokens=(1024,),
+        seq_len=64,
+        steps=8,
+        seeds=(0, 1),
+        eval_batches=2,
+        eval_seqs=8,
+        checkpoint_every=0,
+    )
+)
+
+_COMPILES = [0]
+
+
+def _count_compiles(event: str, duration: float, **kw) -> None:
+    if event == "/jax/core/compile/backend_compile_duration":
+        _COMPILES[0] += 1
+
+
+jax.monitoring.register_event_duration_secs_listener(_count_compiles)
+
+
+def _grid(name: str):
+    return LADDER_LITE if name == "ladder-lite" else get_sweep(name)
+
+
+def _run(sweep, workdir: str, *, stack: bool, share: bool) -> dict:
+    ledger = os.path.join(workdir, f"SWEEP_{sweep.name}.jsonl")
+    if os.path.exists(ledger):
+        os.remove(ledger)
+    jitcache.clear()  # phases must not inherit each other's executables
+    c0, t0 = _COMPILES[0], time.perf_counter()
+    with jitcache.sharing(share):
+        run_sweep(sweep, ledger, "", quiet=True, stack=stack)
+    dt = time.perf_counter() - t0
+    records = read_ledger(ledger)
+    return {
+        "n_cells": len(records),
+        "time_to_ledger_s": dt,
+        "cells_per_s": len(records) / dt,
+        "backend_compiles": _COMPILES[0] - c0,
+        "round_builds": jitcache.builds_by_kind().get("superstep", 0),
+        "ledger": records,
+    }
+
+
+def _strip(row: dict) -> dict:
+    return {k: v for k, v in row.items() if k != "ledger"}
+
+
+def _ledger_equal(a: dict, b: dict, *, skip=("runtime_s",)) -> list:
+    """Field-wise comparison of two ledgers; returns mismatch descriptions."""
+    bad = []
+    if set(a) != set(b):
+        return [f"cell sets differ: {sorted(set(a) ^ set(b))}"]
+    for cid in a:
+        for key in a[cid]:
+            if key in skip:
+                continue
+            if a[cid][key] != b[cid].get(key):
+                bad.append(f"{cid}.{key}: {a[cid][key]!r} != {b[cid].get(key)!r}")
+    return bad
+
+
+def bench_grid(name: str, workdir: str, *, check: bool) -> dict:
+    sweep = _grid(name)
+    cells = expand_grid(sweep)
+    plan = plan_groups(cells)
+    groups = sorted(
+        {id(g): [cell_id(s) for s in g] for g in plan.values()}.values(),
+        key=len, reverse=True,
+    )
+    shapes = {
+        (s["arch"], s["mode"], s["m"], s["h"], s["batch_tokens"],
+         s["seq_len"], s["steps"], s["nesterov"], s["streaming_fragments"])
+        for s in cells
+    }
+    distinct_shapes = len(shapes)
+    # expected superstep-round executables on the shared path: one per
+    # distinct shape per round-length variant (a non-H-aligned step count
+    # adds a shorter tail round)
+    expected_rounds = sum(
+        1 if s["steps"] % s["h"] == 0 else 2
+        for s in ({"steps": k[6], "h": max(k[3], 1)} for k in shapes)
+    )
+    print(f"--- grid {name}: {len(cells)} cells, {distinct_shapes} distinct "
+          f"shapes, {len(groups)} stacked groups "
+          f"{[len(g) for g in groups]}")
+
+    seq = _run(sweep, workdir, stack=False, share=False)
+    shared = _run(sweep, workdir, stack=False, share=True)
+    stacked = _run(sweep, workdir, stack=True, share=True)
+
+    out = {
+        "grid": name,
+        "n_cells": len(cells),
+        "distinct_shapes": distinct_shapes,
+        "expected_round_builds": expected_rounds,
+        "stack_groups": [len(g) for g in groups],
+        "sequential": _strip(seq),
+        "shared": _strip(shared),
+        "stacked": _strip(stacked),
+        "speedup_shared": shared["cells_per_s"] / seq["cells_per_s"],
+        "speedup_stacked": stacked["cells_per_s"] / seq["cells_per_s"],
+        "ledger_identical_stacked_vs_sequential":
+            not _ledger_equal(seq["ledger"], stacked["ledger"]),
+    }
+    for path in ("sequential", "shared", "stacked"):
+        r = out[path]
+        print(f"{path:11s} {r['n_cells']} cells in "
+              f"{r['time_to_ledger_s']:6.1f}s = {r['cells_per_s']:.3f} "
+              f"cells/s, {r['backend_compiles']} backend compiles, "
+              f"{r['round_builds']} round executables")
+    print(f"speedups vs sequential: shared {out['speedup_shared']:.2f}x, "
+          f"stacked {out['speedup_stacked']:.2f}x")
+
+    if check:
+        mism = _ledger_equal(seq["ledger"], stacked["ledger"])
+        assert not mism, "stacked ledger != sequential ledger:\n" + "\n".join(mism)
+        mism = _ledger_equal(seq["ledger"], shared["ledger"])
+        assert not mism, "shared ledger != sequential ledger:\n" + "\n".join(mism)
+        assert stacked["cells_per_s"] >= seq["cells_per_s"], (
+            f"stacked path slower than sequential: "
+            f"{stacked['cells_per_s']:.3f} < {seq['cells_per_s']:.3f} cells/s")
+        # shared path: each distinct cell shape compiles its round
+        # executable(s) EXACTLY once, regardless of how many cells share
+        # the shape
+        assert shared["round_builds"] == expected_rounds, (
+            f"shared path built {shared['round_builds']} round executables, "
+            f"expected exactly {expected_rounds} (one per distinct shape "
+            "and round-length variant)")
+        assert shared["backend_compiles"] <= seq["backend_compiles"], (
+            shared["backend_compiles"], seq["backend_compiles"])
+        if len(cells) > distinct_shapes:
+            assert shared["backend_compiles"] < seq["backend_compiles"], (
+                "shape-repeating grid did not reuse executables: "
+                f"{shared['backend_compiles']} vs {seq['backend_compiles']}")
+    return out
+
+
+def bench_warm_cache(name: str, workdir: str) -> dict:
+    """Persistent-compilation-cache phase: run the grid in a subprocess
+    with a cold ``--xla-cache`` dir, then re-run (fresh ledger, warm
+    cache); the second run should skip backend compilation entirely."""
+    import subprocess
+    import sys
+
+    cache_dir = os.path.join(workdir, "xla_cache")
+    times = {}
+    for phase in ("cold", "warm"):
+        ledger = os.path.join(workdir, f"SWEEP_cachephase_{phase}.jsonl")
+        env = dict(os.environ, REPRO_XLA_CACHE_DIR=cache_dir,
+                   PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+        t0 = time.perf_counter()
+        subprocess.run(
+            [sys.executable, "-m", "repro.launch.sweep", "--grid", name,
+             "--ledger", ledger, "--checkpoint-root", "none"],
+            check=True, env=env, capture_output=True,
+        )
+        times[phase] = time.perf_counter() - t0
+    return {
+        "grid": name,
+        "cache_dir_entries": len(os.listdir(cache_dir)),
+        "cold_s": times["cold"],
+        "warm_s": times["warm"],
+        "speedup_warm": times["cold"] / times["warm"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grids", default="smoke-stack,smoke,ladder-lite",
+                    help="comma-separated grid names (smoke-stack / smoke / "
+                         "ladder-lite / any named SweepSpec)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert stacked >= sequential cells/s, "
+                         "shared-path compile reuse, and bitwise-identical "
+                         "ledgers (CI smoke)")
+    ap.add_argument("--warm-cache-grid", default="",
+                    help="also measure a cold-vs-warm persistent-cache "
+                         "re-run of this grid (subprocesses)")
+    ap.add_argument("--out", default="results/BENCH_sweep.json")
+    args = ap.parse_args()
+
+    workdir = tempfile.mkdtemp(prefix="bench_sweep_")
+    try:
+        rows = [
+            bench_grid(name.strip(), workdir, check=args.check)
+            for name in args.grids.split(",") if name.strip()
+        ]
+        warm = None
+        if args.warm_cache_grid:
+            warm = bench_warm_cache(args.warm_cache_grid, workdir)
+            print(f"persistent cache: cold {warm['cold_s']:.1f}s -> warm "
+                  f"{warm['warm_s']:.1f}s ({warm['speedup_warm']:.2f}x, "
+                  f"{warm['cache_dir_entries']} cache entries)")
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    out = {
+        "device": jax.devices()[0].platform,
+        "results": rows,
+        "warm_cache": warm,
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

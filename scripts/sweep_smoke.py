@@ -22,8 +22,13 @@ import shutil
 import sys
 
 from repro.configs import get_sweep
+from repro.launch import xla_cache
 from repro.launch.fit import fit_ledger
 from repro.launch.sweep import _json_safe, read_ledger, run_sweep
+
+# persistent compilation cache: CI persists results/.xla_cache across runs
+# (actions/cache), so re-runs of this drill skip XLA compilation entirely
+xla_cache.enable()
 
 LEDGER = os.path.join("results", "SWEEP_smoke.jsonl")
 CKPT_ROOT = os.path.join("results", "sweep_smoke_ckpt")

@@ -299,6 +299,7 @@ class Checkpointer:
         with np.load(path) as z:
             flat = {k: z[k] for k in z.files}
         manifest = self._read_manifest(step)
+        self._sync_hparams(flat, template)
 
         if template is not None:
             if num_replicas is not None:
@@ -334,6 +335,32 @@ class Checkpointer:
 
             state = elastic.resize_replicas(trainer, state, target_m)
         return self._device_put(state, trainer), step
+
+    def _sync_hparams(self, flat: dict, template: Any = None) -> None:
+        """Make the restored ``hparams`` leaves reflect the CURRENT config.
+
+        Two cases in one: (a) migration — checkpoints written before the
+        state carried an ``hparams`` leaf lack ``hparams/*`` keys entirely;
+        (b) config drift — the run was relaunched with a different lr /
+        outer-lr.  Either way the current trainer config wins (the
+        pre-traced-hparams behavior, where relaunching with ``--lr`` baked
+        the new value into fresh executables).  For a same-config resume
+        the values are identical to what was saved, so exact resume is
+        unaffected; for changed configs the fingerprint warning already
+        fires."""
+        src = None
+        if self.trainer is not None:
+            src = {"hparams": self.trainer.hparams()}
+        elif isinstance(template, dict) and "hparams" in template:
+            src = {"hparams": template["hparams"]}
+        if src is None:
+            return
+        try:
+            current = _flatten(src)
+        except Exception:  # abstract template leaves have no values
+            return
+        for k, v in current.items():
+            flat[k] = v
 
     def _check_fingerprint(self, manifest: dict, strict: bool) -> None:
         saved = manifest.get("fingerprint")

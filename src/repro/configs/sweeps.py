@@ -38,6 +38,14 @@ class SweepSpec:
     replicas: tuple = (1, 2)
     sync_every: tuple = (5,)
     batch_tokens: tuple = (2048,)
+    # hyperparameter axes (paper Tables 7-13 sweep lr per scale).  Empty
+    # tuple = collapse to the scalar recipe value below.  Cells that differ
+    # ONLY along these axes (and seeds) are shape-compatible, so the sweep
+    # driver stacks them into one vmapped executable
+    # (repro.core.cellbatch) instead of running them sequentially.
+    lrs: tuple = ()                  # () -> (lr or default_lr(d_model),)
+    outer_lrs: tuple = ()            # () -> (outer_lr,)
+    seeds: tuple = ()                # () -> (seed,)
     # --- per-cell recipe ------------------------------------------------
     seq_len: int = 128
     steps: int = 0                   # 0 -> budget_mult * N / B (constant rule)
@@ -76,6 +84,24 @@ SWEEPS = {
         eval_batches=2,
         eval_seqs=8,
         checkpoint_every=4,
+    ),
+    # Stackable smoke: one (arch, M, H, B) shape swept over lr x seed — the
+    # 6 cells form a single cell-batched group, so this grid exercises (and
+    # benchmarks) the vmap-stacked sweep path end to end.
+    "smoke-stack": SweepSpec(
+        name="smoke-stack",
+        archs=("tiny-t0",),
+        modes=("diloco",),
+        replicas=(2,),
+        sync_every=(4,),
+        batch_tokens=(1024,),
+        lrs=(3e-3, 2e-3, 1e-3),
+        seeds=(0, 1),
+        seq_len=64,
+        steps=8,
+        warmup_frac=0.25,
+        eval_batches=2,
+        eval_seqs=8,
     ),
     # CPU-feasible ladder: the benchmark grid as a ledger-producing sweep
     # (tiny family, all four sync modes, the paper's M / H / B axes reduced).

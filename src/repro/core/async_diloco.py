@@ -40,7 +40,8 @@ class AsyncDiLoCo:
         """One inner step for ONE replica (others untouched)."""
         params_m = jax.tree.map(lambda p: p[replica], state["inner_params"])
         opt_m = jax.tree.map(lambda o: o[replica], state["inner_opt"])
-        new_p, new_o, _ = self.trainer._replica_step(params_m, opt_m, batch_m, state["step"])
+        new_p, new_o, _ = self.trainer._replica_step(
+            params_m, opt_m, batch_m, state["step"], state["hparams"])
         return {
             **state,
             "inner_params": jax.tree.map(
@@ -66,9 +67,10 @@ class AsyncDiLoCo:
             lambda g, p: w * (g.astype(jnp.float32) - p[replica].astype(jnp.float32)),
             gparams, state["inner_params"],
         )
+        hp = state["hparams"]
         new_global, new_mom = outer_opt.outer_step(
             gparams, delta, state["outer_m"],
-            lr=dcfg.outer_lr, mu=dcfg.outer_momentum, nesterov=dcfg.nesterov,
+            lr=hp["outer_lr"], mu=hp["outer_momentum"], nesterov=dcfg.nesterov,
         )
         new_inner = jax.tree.map(
             lambda full, g: full.at[replica].set(g.astype(full.dtype)),

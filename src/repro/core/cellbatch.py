@@ -1,0 +1,206 @@
+"""Cell-batched sweep execution: K grid cells as ONE donated executable.
+
+The paper's headline artifact is a grid of runs (Tables 7-13 sweep
+N x M x H x B x sync-mode over many small models), and most of that grid
+varies only *scalar* hyperparameters — inner lr, outer lr / momentum, data
+seed — between cells of identical shape.  Running those cells sequentially
+pays per-cell dispatch overhead K times and leaves the hardware's batch
+dimension idle; with hyperparameters traced through the state's ``hparams``
+leaf (``repro.core.diloco``) and synthetic-data operands threaded through
+the round (``repro.core.superstep.round_body``), the entire round body is a
+pure function of per-cell arrays — so K shape-compatible cells can be
+stacked along a leading ``cell`` axis and vmapped into one compiled,
+donated superstep per outer round.
+
+``CellBatchEngine`` is that path.  Requirements for stacking (enforced):
+
+* identical static signature (same arch, B, seq_len, M, H, steps budget,
+  sync mode, nesterov flag, fragment count) — cells may differ ONLY in the
+  traced hyperparameters and the data/init seeds;
+* on-device synthetic data (``SyntheticLM``) — per-cell PRNG roots and
+  transition tables are stacked operands; file-backed sources stay on the
+  sequential engine;
+* no ambient sharding rules (the sweep runs cells unsharded; the leading
+  cell axis would otherwise collide with the replica-axis constraints).
+
+Per-cell results are bitwise-identical to the sequential ``SuperstepEngine``
+on this backend (vmap adds a batch dimension to every op; it does not
+change per-cell reduction order) —
+``tests/test_engine.py::test_cellbatch_matches_superstep_per_cell`` pins
+this for all four sync modes, and ``tests/test_sweep.py`` pins ledger
+equality end to end.
+
+Donation caveat: as with the superstep engine, the stacked state passed to
+``run_round``/``run`` is CONSUMED.  Rebind ``states = engine.run(...)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding
+from repro.core import jitcache
+from repro.core.diloco import static_signature
+from repro.core.superstep import round_body
+from repro.data import SyntheticLM
+
+
+def stack_trees(trees: Sequence[Any]):
+    """Stack a list of identically-shaped pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def unstack_tree(tree: Any, k: int):
+    """Slice cell ``k`` out of a stacked pytree (device-side gather)."""
+    return jax.tree.map(lambda x: x[k], tree)
+
+
+class CellBatchEngine:
+    """Runs K stacked cells, one compiled donated round per dispatch.
+
+    ``trainers``: one ``DiLoCo`` per cell — all must share
+    ``static_signature`` (they may differ only in the traced
+    hyperparameters, which ride in each cell's ``hparams`` state leaf).
+    ``datas``: one ``SyntheticLM`` per cell (seeds may differ).
+    """
+
+    def __init__(
+        self,
+        trainers: Sequence[Any],
+        datas: Sequence[SyntheticLM],
+        batch_seqs: int,
+        *,
+        unroll: int = 1,
+        donate: bool = True,
+        share: bool = True,
+    ):
+        if len(trainers) != len(datas) or not trainers:
+            raise ValueError("need one data source per trainer (and K >= 1)")
+        if sharding.current_rules():
+            raise ValueError(
+                "CellBatchEngine stacks cells along a leading axis and does "
+                "not compose with ambient sharding rules; run cells "
+                "unsharded (the sweep driver does) or use SuperstepEngine"
+            )
+        sigs = {static_signature(t) for t in trainers}
+        if len(sigs) != 1:
+            raise ValueError(
+                "all stacked cells must share one static signature (same "
+                f"arch/M/H/B/steps/sync-mode); got {len(sigs)} distinct"
+            )
+        for d in datas:
+            if not isinstance(d, SyntheticLM):
+                raise ValueError(
+                    "cell batching requires on-device SyntheticLM data; "
+                    "file-backed cells run on the sequential engine"
+                )
+        shapes = {(d.seq_len, d._logits.shape) for d in datas}
+        if len(shapes) != 1:
+            raise ValueError(f"data sources disagree on shape: {shapes}")
+
+        self.trainers = list(trainers)
+        self.trainer = trainers[0]
+        self.K = len(trainers)
+        self.datas = list(datas)
+        self.batch_seqs = batch_seqs
+        self.chunk = self.trainer.dcfg.sync_every
+        self.donate = donate
+        self.unroll = unroll
+        self.share = share
+        self.seq_len = datas[0].seq_len
+        # stacked per-cell datagen operands: (K, 2) PRNG roots, (K, D, V, V)
+        # transition tables
+        self._droot = jnp.stack([d._root for d in datas])
+        self._dlogits = jnp.stack([d._logits for d in datas])
+        self._local_rounds: Dict[Tuple, Any] = {}
+
+    # ---- state ----------------------------------------------------------
+    def init_states(self, seeds: Sequence[int]) -> dict:
+        """Per-cell ``init_state(PRNGKey(seed))`` stacked along the cell
+        axis; each cell's ``hparams`` leaf carries its own scalars."""
+        if len(seeds) != self.K:
+            raise ValueError(f"need {self.K} seeds, got {len(seeds)}")
+        return stack_trees([
+            t.init_state(jax.random.PRNGKey(s))
+            for t, s in zip(self.trainers, seeds)
+        ])
+
+    # ---- compiled round -------------------------------------------------
+    def _round_fn(self, length: int, do_sync: bool):
+        key = (
+            "cellbatch", static_signature(self.trainer), self.K, length,
+            do_sync, self.donate, min(self.unroll, length), self.batch_seqs,
+            self.seq_len,
+        )
+
+        def build():
+            fn = round_body(
+                self.trainer, length, do_sync,
+                batch_seqs=self.batch_seqs, seq_len=self.seq_len,
+                on_device_data=True, unroll=self.unroll,
+            )
+            # cell axis: state / datagen operands are per-cell; xs and
+            # weights are unused on this path (None pytrees)
+            vfn = jax.vmap(fn, in_axes=(0, None, 0, 0, None))
+            return jax.jit(vfn, donate_argnums=(0,) if self.donate else ())
+
+        if not self.share:
+            fn = self._local_rounds.get(key)
+            if fn is None:
+                fn = self._local_rounds[key] = build()
+            return fn
+        return jitcache.get_or_build(key, build, self._local_rounds)
+
+    # ---- driving --------------------------------------------------------
+    def run_round(self, states, start: int, length: Optional[int] = None):
+        """One stacked round: ``length`` inner steps for all K cells (plus
+        the outer sync on H boundaries) in one executable.  Returns
+        ``(states, metrics)`` with metrics as ``(K, length)`` host arrays.
+        CONSUMES ``states``."""
+        length = self.chunk if length is None else length
+        end = start + length
+        dcfg = self.trainer.dcfg
+        if not dcfg.data_parallel and dcfg.streaming_fragments == 0:
+            boundary = (start // self.chunk + 1) * self.chunk
+            if end > boundary:
+                raise ValueError(
+                    f"round [{start}, {end}) crosses the outer-sync boundary "
+                    f"at step {boundary}; split windows at multiples of "
+                    f"sync_every={self.chunk} (engine.run does this)"
+                )
+        do_sync = (end % self.chunk == 0) and not dcfg.data_parallel
+        states, metrics = self._round_fn(length, do_sync)(
+            states, None, self._droot, self._dlogits, None)
+        return states, jax.device_get(metrics)
+
+    def round_bounds(self, step: int, steps: int) -> Tuple[int, int]:
+        end = min(steps, (step // self.chunk + 1) * self.chunk)
+        nxt = min(steps, (end // self.chunk + 1) * self.chunk) - end
+        return end, nxt
+
+    def run(self, states, steps: int, start: int = 0):
+        """Drive ``start..steps`` in H-aligned rounds for all K cells.
+        Returns ``(states, metrics)`` with metrics as ``(K, steps - start)``
+        host arrays."""
+        collected = []
+        step = start
+        while step < steps:
+            end, _ = self.round_bounds(step, steps)
+            states, m = self.run_round(states, step, end - step)
+            collected.append(m)
+            step = end
+        if not collected:
+            return states, {}
+        metrics = {
+            k: np.concatenate(
+                [np.atleast_2d(m[k]) for m in collected], axis=1)
+            for k in collected[0]
+        }
+        return states, metrics
+
+    def unstack(self, states) -> List[dict]:
+        """Per-cell states (e.g. for the standard unbatched eval path)."""
+        return [unstack_tree(states, k) for k in range(self.K)]

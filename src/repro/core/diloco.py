@@ -18,6 +18,21 @@ Two execution paths share the same functions:
     ``step % H == 0`` — used by the multi-pod dry-run so the whole
     communication schedule (including the cross-pod all-reduce) is visible
     in one compiled HLO.
+
+Scalar hyperparameters (inner peak lr / warmup / weight decay, outer lr /
+momentum) are TRACED: ``init_state`` puts them in the state's ``hparams``
+leaf as 0-d arrays and ``_replica_step``/``outer_sync`` read them from
+there instead of baking ``self.ocfg``/``self.dcfg`` Python constants into
+the executable.  Two trainers that differ only in those scalars therefore
+produce identical jaxprs — the foundation for cross-cell executable
+sharing (``repro.core.jitcache``) and for the cell-batched sweep engine
+(``repro.core.cellbatch``), which stacks per-cell hyperparameters along a
+leading cell axis and vmaps over them.  Every execution path that reads
+``hparams`` (per-step, superstep, stacked) is bitwise-consistent with
+every other; note the results can differ from the PRE-hparams executables
+by ~1 ulp, because XLA could constant-fold a baked Python scalar (e.g.
+rewrite the warmup division into a reciprocal multiply) where a traced
+operand stays a true divide.
 """
 from __future__ import annotations
 
@@ -30,11 +45,30 @@ import jax.numpy as jnp
 
 from repro import sharding
 from repro.configs.base import DiLoCoConfig, OptimizerConfig, TrainConfig
-from repro.core import compression, outer_opt
+from repro.core import compression, jitcache, outer_opt
 from repro.models.build import Model
 from repro.optim import adamw_init, adamw_update, clip_by_global_norm
 from repro.optim.adamw import abstract_adamw_state
 from repro.optim.schedules import warmup_cosine
+
+
+def static_signature(trainer: "DiLoCo") -> tuple:
+    """Everything that shapes a trainer's jaxprs, and nothing more.
+
+    The traced hyperparameters (peak_lr, warmup_steps, weight_decay,
+    outer_lr, outer_momentum) are deliberately EXCLUDED: they live in the
+    state's ``hparams`` leaf, so trainers differing only in them produce
+    identical jaxprs and may share compiled executables.
+    """
+    o, d, t = trainer.ocfg, trainer.dcfg, trainer.tcfg
+    return (
+        trainer.model.cfg,
+        (d.num_replicas, d.sync_every, d.data_parallel, d.compression,
+         d.streaming_fragments, d.error_feedback, d.nesterov),
+        (o.b1, o.b2, o.eps, o.clip_norm, o.final_lr_ratio),
+        (t.global_batch_tokens, t.seq_len, t.steps, t.microbatches),
+        jitcache.context_key(),
+    )
 
 
 @dataclasses.dataclass
@@ -43,6 +77,7 @@ class DiLoCo:
     dcfg: DiLoCoConfig
     ocfg: OptimizerConfig
     tcfg: TrainConfig
+    # per-instance fallback cache, used when process-wide sharing is off
     _jit_cache: dict = dataclasses.field(
         default_factory=dict, init=False, repr=False, compare=False
     )
@@ -52,19 +87,25 @@ class DiLoCo:
     # update is in-place (XLA aliases the buffers).  Callers must treat the
     # passed-in state as CONSUMED: rebind `state = fn(state, ...)` and never
     # touch the old reference again.
+    #
+    # Executables are cached process-wide by static_signature(): two trainer
+    # instances that agree structurally (and differ at most in the traced
+    # hyperparameters) share one compiled executable per entry point.
     def jit_inner_step(self, donate: bool = True):
         return self._jitted("inner_step", self.inner_step, donate)
 
     def jit_outer_sync(self, donate: bool = True):
         return self._jitted("outer_sync", self.outer_sync, donate)
 
+    def jit_eval_step(self):
+        return self._jitted("eval_step", self.eval_step, False)
+
     def _jitted(self, name: str, fn, donate: bool):
-        key = (name, donate)
-        if key not in self._jit_cache:
-            self._jit_cache[key] = jax.jit(
-                fn, donate_argnums=(0,) if donate else ()
-            )
-        return self._jit_cache[key]
+        key = ("diloco", static_signature(self), name, donate)
+        return jitcache.get_or_build(
+            key, lambda: jax.jit(fn, donate_argnums=(0,) if donate else ()),
+            self._jit_cache,
+        )
 
     # ------------------------------------------------------------------
     @property
@@ -91,6 +132,27 @@ class DiLoCo:
             return "streaming"
         return "none"
 
+    # ---- traced hyperparameters ------------------------------------------
+    def hparams(self) -> dict:
+        """The scalar hyperparameters the executables read from the state's
+        ``hparams`` leaf (0-d device arrays, traced — NOT baked constants).
+        ``weight_decay`` is pre-resolved (the ``-1 -> 1/T`` rule is Python
+        logic, not something to re-derive in-graph)."""
+        hp = {
+            "peak_lr": jnp.float32(self.ocfg.peak_lr),
+            "warmup": jnp.int32(self.ocfg.warmup_steps),
+            "weight_decay": jnp.float32(self.weight_decay),
+        }
+        if not self.dcfg.data_parallel:
+            hp["outer_lr"] = jnp.float32(self.dcfg.outer_lr)
+            hp["outer_momentum"] = jnp.float32(self.dcfg.outer_momentum)
+        return hp
+
+    def abstract_hparams(self) -> dict:
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.hparams()
+        )
+
     # ---- state ------------------------------------------------------------
     def init_state(self, key: jax.Array, dtype=jnp.float32) -> dict:
         gparams = self.model.init(key, dtype)
@@ -101,6 +163,7 @@ class DiLoCo:
             "step": jnp.zeros((), jnp.int32),
             "inner_params": inner,
             "inner_opt": inner_opt,
+            "hparams": self.hparams(),
         }
         if not self.dcfg.data_parallel:
             state["global_params"] = gparams
@@ -121,6 +184,7 @@ class DiLoCo:
             "step": jax.ShapeDtypeStruct((), jnp.int32),
             "inner_params": lead(gparams),
             "inner_opt": lead(abstract_adamw_state(gparams)),
+            "hparams": self.abstract_hparams(),
         }
         if not self.dcfg.data_parallel:
             state["global_params"] = gparams
@@ -158,6 +222,7 @@ class DiLoCo:
                 "v": opt_spec(rep),
                 "count": sharding.spec("replica"),
             },
+            "hparams": {k: sharding.spec() for k in self.hparams()},
         }
         if not self.dcfg.data_parallel:
             specs["global_params"] = pspec()
@@ -176,7 +241,7 @@ class DiLoCo:
         return jax.tree.map(one, batch)
 
     # ---- inner step ----------------------------------------------------------
-    def _replica_step(self, params, opt, batch, step):
+    def _replica_step(self, params, opt, batch, step, hp):
         k = self.tcfg.microbatches
         if k > 1:
             # gradient accumulation: scan over k microbatches (sequential in
@@ -212,15 +277,15 @@ class DiLoCo:
         grads, gnorm = clip_by_global_norm(grads, self.ocfg.clip_norm)
         lr = warmup_cosine(
             step + 1,  # 1-based: step 0 would otherwise burn a batch at lr=0
-            peak_lr=self.ocfg.peak_lr,
-            warmup=self.ocfg.warmup_steps,
+            peak_lr=hp["peak_lr"],
+            warmup=hp["warmup"],
             total=self.tcfg.steps,
             final_ratio=self.ocfg.final_lr_ratio,
         )
         params, opt = adamw_update(
             params, grads, opt,
             lr=lr, b1=self.ocfg.b1, b2=self.ocfg.b2, eps=self.ocfg.eps,
-            weight_decay=self.weight_decay,
+            weight_decay=hp["weight_decay"],
         )
         metrics = dict(metrics)
         metrics["loss"] = loss_val
@@ -232,8 +297,9 @@ class DiLoCo:
         """One inner AdamW step on every replica (vmapped over the M axis)."""
         step = state["step"]
         params, opt, metrics = jax.vmap(
-            self._replica_step, in_axes=(0, 0, 0, None)
-        )(state["inner_params"], state["inner_opt"], batch, step)
+            self._replica_step, in_axes=(0, 0, 0, None, None)
+        )(state["inner_params"], state["inner_opt"], batch, step,
+          state["hparams"])
         params = self._constrain(params)
         state = {**state, "inner_params": params, "inner_opt": opt, "step": step + 1}
         metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), metrics)
@@ -295,9 +361,10 @@ class DiLoCo:
                 gparams, inner,
             )
 
+        hp = state["hparams"]
         new_global, new_mom = outer_opt.outer_step(
             gparams, delta, state["outer_m"],
-            lr=self.dcfg.outer_lr, mu=self.dcfg.outer_momentum,
+            lr=hp["outer_lr"], mu=hp["outer_momentum"],
             nesterov=self.dcfg.nesterov,
         )
         # broadcast the fresh global model to all replicas

@@ -1,0 +1,108 @@
+"""Process-wide executable cache keyed by *static shape signature*.
+
+A sweep builds a fresh ``DiLoCo`` trainer (and ``SuperstepEngine``) per grid
+cell, so every cell used to pay a full trace + XLA compile even when the
+only difference from the previous cell was a scalar hyperparameter (inner
+lr, outer lr, momentum, seed).  With hyperparameters threaded through the
+state's ``hparams`` leaf (traced arrays, not Python constants — see
+``repro.core.diloco``), two trainers that agree on everything *structural*
+produce byte-identical jaxprs — so their executables can be shared.
+
+This module is that sharing point: a dict from hashable signature ->
+``jax.jit`` object, plus build counters the benchmarks use to prove "each
+distinct cell shape compiles exactly once".  The signature must include the
+ambient sharding context (rules + mesh): the traced computation reads
+``sharding.current_rules()`` at trace time, so trainers under different
+meshes must NOT share.
+
+``sharing(False)`` disables the cache (every lookup builds fresh) — used by
+``benchmarks/bench_sweep.py`` to time the historical no-sharing path.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Callable, Dict, Hashable, Optional
+
+_SHARING: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "jitcache_sharing", default=True
+)
+
+_CACHE: Dict[Hashable, Any] = {}
+_BUILDS: Dict[Hashable, int] = {}
+
+
+@contextlib.contextmanager
+def sharing(enabled: bool):
+    """Context manager: enable/disable cross-instance executable sharing."""
+    token = _SHARING.set(enabled)
+    try:
+        yield
+    finally:
+        _SHARING.reset(token)
+
+
+def sharing_enabled() -> bool:
+    return _SHARING.get()
+
+
+def get_or_build(key: Hashable, build: Callable[[], Any],
+                 local: Optional[Dict[Hashable, Any]] = None):
+    """Return the cached executable for ``key``, building (and counting the
+    build) on miss.
+
+    With sharing enabled the process-wide cache is used; with sharing
+    disabled the caller's ``local`` per-instance cache is used instead —
+    the historical one-cache-per-trainer/engine behavior, NOT
+    build-on-every-call (a no-sharing benchmark baseline must still cache
+    within an instance, as the pre-sharing code did).  Builds are counted
+    either way.
+    """
+    cache = _CACHE if _SHARING.get() else local
+    if cache is None:
+        _BUILDS[key] = _BUILDS.get(key, 0) + 1
+        return build()
+    fn = cache.get(key)
+    if fn is None:
+        fn = build()
+        cache[key] = fn
+        _BUILDS[key] = _BUILDS.get(key, 0) + 1
+    return fn
+
+
+def build_count() -> int:
+    """Total executable builds since the last ``reset_stats()``."""
+    return sum(_BUILDS.values())
+
+
+def builds_by_kind() -> Dict[str, int]:
+    """Build counts grouped by the key's leading tag (``"diloco"``,
+    ``"superstep"``, ``"cellbatch"``) — the benchmark's reuse assertion."""
+    out: Dict[str, int] = {}
+    for key, n in _BUILDS.items():
+        kind = key[0] if isinstance(key, tuple) and key else str(key)
+        out[kind] = out.get(kind, 0) + n
+    return out
+
+
+def distinct_keys() -> int:
+    return len(_BUILDS)
+
+
+def reset_stats() -> None:
+    _BUILDS.clear()
+
+
+def clear() -> None:
+    """Drop every cached executable (tests / memory pressure)."""
+    _CACHE.clear()
+    _BUILDS.clear()
+
+
+def context_key() -> tuple:
+    """The ambient-sharding part of every signature: trainers under
+    different rules/mesh trace different constraint ops and must not share."""
+    from repro import sharding
+
+    rules = sharding.current_rules()
+    return (frozenset(rules.items()) if rules else None, sharding.current_mesh())

@@ -80,6 +80,7 @@ class FragmentSync:
         """Outer sync restricted to one fragment's leaves (traceable; the
         Python flatten below runs once per trace, never per call)."""
         dcfg = self.trainer.dcfg
+        hp = state["hparams"]
         gleaves, treedef = jax.tree.flatten(state["global_params"])
         ileaves = jax.tree.leaves(state["inner_params"])
         mleaves = jax.tree.leaves(state["outer_m"])
@@ -95,7 +96,8 @@ class FragmentSync:
             delta = g.astype(jnp.float32) - jnp.mean(p, axis=0, dtype=jnp.float32)
             (g2,), (m2,) = outer_opt.outer_step(
                 (g,), (delta,), (m,),
-                lr=dcfg.outer_lr, mu=dcfg.outer_momentum, nesterov=dcfg.nesterov,
+                lr=hp["outer_lr"], mu=hp["outer_momentum"],
+                nesterov=dcfg.nesterov,
             )
             new_g.append(g2)
             new_m.append(m2)

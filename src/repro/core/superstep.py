@@ -23,6 +23,16 @@ an entire outer round:
 * stacked ``(H, ...)`` metrics returned to the host — ONE host sync per
   outer round instead of one per step.
 
+Cross-cell executable reuse: the round executable is a pure function of the
+trainer's *static signature* (``repro.core.diloco.static_signature``) —
+scalar hyperparameters come from the state's ``hparams`` leaf and the
+synthetic data source's PRNG root / transition table are passed as OPERANDS
+(not closure constants), so round executables are cached process-wide
+(``repro.core.jitcache``): a sweep of cells that differ only in lr / seed /
+outer-optimizer scalars compiles each round shape exactly once.  The same
+round body, vmapped over a leading cell axis, powers the cell-batched
+sweep engine (``repro.core.cellbatch``).
+
 Donation caveat: the state passed to ``run_round``/``run`` is CONSUMED
 (XLA aliases its buffers for the update).  Rebind ``state = engine.run_*``
 and never touch the old reference.
@@ -30,41 +40,110 @@ and never touch the old reference.
 from __future__ import annotations
 
 import concurrent.futures
+import threading
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import streaming
+from repro.core import jitcache, streaming
+from repro.core.diloco import static_signature
 from repro.data import SyntheticLM
+from repro.data.pipeline import synthetic_tokens
+
+
+def device_batch(root: jax.Array, logits: jax.Array, step: jax.Array,
+                 num_replicas: int, batch_seqs: int, seq_len: int) -> dict:
+    """Traceable global batch at ``step`` from a SyntheticLM's PRNG root and
+    transition table, bitwise-equal to ``data.global_batch(step, M, b)``.
+
+    ``root``/``logits`` are operands: the caller passes ``data._root`` /
+    ``data._logits`` at dispatch time, so one compiled executable serves
+    every data seed (and the cell-batched engine vmaps them over cells).
+    """
+    M = num_replicas
+    key = jax.random.fold_in(root, step)
+
+    def one(m):
+        k = jax.random.fold_in(key, m + M * 7919)
+        return synthetic_tokens(logits, k, batch_seqs, seq_len)
+
+    toks = jax.vmap(one)(jnp.arange(M))  # (M, b, L+1)
+    return {
+        "tokens": toks[..., :-1].astype(jnp.int32),
+        "labels": toks[..., 1:].astype(jnp.int32),
+    }
 
 
 def device_batch_fn(data: SyntheticLM, num_replicas: int, batch_seqs: int) -> Callable:
-    """Traceable ``step -> global batch``, bitwise-equal to
-    ``data.global_batch(step, num_replicas, batch_seqs)``.
-
-    The step counter (a traced int32 inside the superstep's scan) is folded
-    into the PRNG key exactly as the host path folds the Python int, and the
-    per-replica generator runs under ``vmap`` — so batches are generated on
-    device, inside the compiled round, with no host involvement.
-    """
-    M = num_replicas
+    """Convenience closure form of ``device_batch`` bound to one source:
+    traceable ``step -> global batch``."""
 
     def batch_at(step: jax.Array) -> dict:
-        key = jax.random.fold_in(data._root, step)
-
-        def one(m):
-            k = jax.random.fold_in(key, m + M * 7919)
-            return data._gen(k, batch_seqs)
-
-        toks = jax.vmap(one)(jnp.arange(M))  # (M, b, L+1)
-        return {
-            "tokens": toks[..., :-1].astype(jnp.int32),
-            "labels": toks[..., 1:].astype(jnp.int32),
-        }
+        return device_batch(data._root, data._logits, step,
+                           num_replicas, batch_seqs, data.seq_len)
 
     return batch_at
+
+
+def round_body(trainer, length: int, do_sync: bool, *, batch_seqs: int,
+               seq_len: int, on_device_data: bool, unroll: int = 1) -> Callable:
+    """The traceable superstep round shared by ``SuperstepEngine`` (jitted
+    directly) and ``CellBatchEngine`` (vmapped over a leading cell axis).
+
+    Returns ``round_fn(state, xs, droot, dlogits, weights)``:
+
+    * ``xs`` — stacked ``(length, M, b, L)`` host batches (file-backed
+      sources); ``None`` with on-device generation;
+    * ``droot``/``dlogits`` — the SyntheticLM PRNG root + transition table
+      operands for on-device generation; ``None`` otherwise;
+    * ``weights`` — optional (M,) outer participation weights.
+
+    Depends on ``trainer`` only through its static signature (hyperparams
+    ride in ``state["hparams"]``), which is what makes the compiled form
+    shareable across same-shape trainers.
+    """
+    dcfg = trainer.dcfg
+    H = dcfg.sync_every
+    P = dcfg.streaming_fragments
+    M = trainer.M
+    frag = (
+        streaming.FragmentSync(trainer)
+        if (P > 0 and not dcfg.data_parallel)
+        else None
+    )
+
+    def round_fn(state, xs, droot, dlogits, weights):
+        def body(st, x):
+            if on_device_data:
+                batch = device_batch(droot, dlogits, st["step"], M,
+                                     batch_seqs, seq_len)
+            else:
+                batch = x
+            st, metrics = trainer.inner_step(st, batch)
+            if frag is not None:
+                # mid-round fragment syncs at their scheduled steps
+                # (st["step"] is post-increment, i.e. 1-based like the
+                # per-step loop's `step + 1`)
+                for p in range(P):
+                    st = jax.lax.cond(
+                        streaming.is_due(st["step"], p, P, H),
+                        lambda s, p=p: frag.apply(s, p),
+                        lambda s: s,
+                        st,
+                    )
+            return st, metrics
+
+        state, metrics = jax.lax.scan(
+            body, state, xs, length=length,
+            unroll=min(unroll, length),
+        )
+        if do_sync and frag is None and not dcfg.data_parallel:
+            state = trainer.outer_sync(state, weights)
+        return state, metrics
+
+    return round_fn
 
 
 class RoundPrefetcher:
@@ -81,15 +160,22 @@ class RoundPrefetcher:
         self._bs = batch_seqs
         self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
         self._pending: Dict[Tuple[int, int], concurrent.futures.Future] = {}
+        self._closed = threading.Event()
 
     def _build(self, start: int, length: int):
-        rounds = [
-            self._data.global_batch(start + i, self._m, self._bs)
-            for i in range(length)
-        ]
+        rounds = []
+        for i in range(length):
+            if self._closed.is_set():
+                return None
+            rounds.append(self._data.global_batch(start + i, self._m, self._bs))
         stacked = jax.tree.map(
             lambda *xs: np.stack([np.asarray(x) for x in xs]), *rounds
         )
+        # checked immediately before the transfer: a close() racing an
+        # in-flight speculative build must not land device buffers it can
+        # no longer release
+        if self._closed.is_set():
+            return None
         return jax.device_put(stacked)
 
     def schedule(self, start: int, length: int) -> None:
@@ -102,23 +188,31 @@ class RoundPrefetcher:
         ``next_length`` steps (default: same length; 0 = end of training,
         prefetch nothing).  Mis-predicted pending rounds are discarded so
         stale batches don't pin device memory."""
+        if self._closed.is_set():
+            raise RuntimeError("RoundPrefetcher is closed")
         fut = self._pending.pop((start, length), None)
         for stale in list(self._pending):
             self._pending.pop(stale).cancel()
-        xs = fut.result() if fut is not None else self._build(start, length)
+        xs = fut.result() if fut is not None else None
+        if xs is None:  # not scheduled, or the build lost a race with close()
+            xs = self._build(start, length)
         next_length = length if next_length is None else next_length
         if next_length > 0:
             self.schedule(start + length, next_length)
         return xs
 
     def close(self) -> None:
-        """Drop any pending readahead and stop the worker.  Call after the
-        last round when driving ``run_round`` directly without the
-        ``next_length=0`` end hint, so the final speculative batch doesn't
-        stay pinned on device for the engine's lifetime."""
+        """Stop the worker and drop any pending readahead — including a
+        ``_build`` already running: queued futures are cancelled
+        (``cancel_futures=True``), and an in-flight build observes
+        ``_closed`` and bails before its ``device_put``, so no speculative
+        batch can land on device after close and stay pinned there.  Call
+        after the last round when driving ``run_round`` directly without
+        the ``next_length=0`` end hint."""
+        self._closed.set()
         for key in list(self._pending):
             self._pending.pop(key).cancel()
-        self._pool.shutdown(wait=False)
+        self._pool.shutdown(wait=False, cancel_futures=True)
 
 
 class SuperstepEngine:
@@ -126,6 +220,9 @@ class SuperstepEngine:
 
     ``chunk`` (default ``dcfg.sync_every``) is the scan length; rounds that
     end on an H boundary include the outer sync in the same executable.
+    Round executables are shared process-wide across engines whose trainers
+    agree on ``static_signature`` (disable with ``share=False`` or the
+    ``jitcache.sharing(False)`` context).
     """
 
     def __init__(
@@ -138,6 +235,7 @@ class SuperstepEngine:
         donate: bool = True,
         device_datagen: Optional[bool] = None,
         unroll: int = 1,
+        share: bool = True,
     ):
         dcfg = trainer.dcfg
         if dcfg.streaming_fragments > 0 and dcfg.compression != "none":
@@ -155,65 +253,37 @@ class SuperstepEngine:
         # scan unroll factor: >1 trades compile time (and code size) for
         # fewer while-loop carry round-trips; worthwhile for tiny models
         self.unroll = unroll
+        self.share = share
         if device_datagen is None:
             device_datagen = isinstance(data, SyntheticLM)
         self._on_device_data = device_datagen
-        self._batch_at = (
-            device_batch_fn(data, trainer.M, batch_seqs) if device_datagen else None
-        )
         self._prefetch = (
             None if device_datagen else RoundPrefetcher(data, trainer.M, batch_seqs)
         )
-        self._frag = (
-            streaming.FragmentSync(trainer)
-            if (dcfg.streaming_fragments > 0 and not dcfg.data_parallel)
-            else None
-        )
-        self._rounds: Dict[Tuple[int, bool], Any] = {}
+        self._local_rounds: Dict[Tuple, Any] = {}
 
     # ---- compiled round -------------------------------------------------
     def _round_fn(self, length: int, do_sync: bool):
-        key = (length, do_sync)
-        fn = self._rounds.get(key)
-        if fn is None:
-            fn = jax.jit(
-                self._make_round(length, do_sync),
-                donate_argnums=(0,) if self.donate else (),
+        key = (
+            "superstep", static_signature(self.trainer), length, do_sync,
+            self.donate, min(self.unroll, length), self._on_device_data,
+            self.batch_seqs, self.data.seq_len,
+        )
+
+        def build():
+            fn = round_body(
+                self.trainer, length, do_sync,
+                batch_seqs=self.batch_seqs, seq_len=self.data.seq_len,
+                on_device_data=self._on_device_data, unroll=self.unroll,
             )
-            self._rounds[key] = fn
-        return fn
+            return jax.jit(fn, donate_argnums=(0,) if self.donate else ())
 
-    def _make_round(self, length: int, do_sync: bool):
-        tr = self.trainer
-        H = tr.dcfg.sync_every
-        P = tr.dcfg.streaming_fragments
-
-        def round_fn(state, xs, weights):
-            def body(st, x):
-                batch = self._batch_at(st["step"]) if self._on_device_data else x
-                st, metrics = tr.inner_step(st, batch)
-                if self._frag is not None:
-                    # mid-round fragment syncs at their scheduled steps
-                    # (st["step"] is post-increment, i.e. 1-based like the
-                    # per-step loop's `step + 1`)
-                    for p in range(P):
-                        st = jax.lax.cond(
-                            streaming.is_due(st["step"], p, P, H),
-                            lambda s, p=p: self._frag.apply(s, p),
-                            lambda s: s,
-                            st,
-                        )
-                return st, metrics
-
-            state, metrics = jax.lax.scan(
-                body, state, xs, length=length,
-                unroll=min(self.unroll, length),
-            )
-            if do_sync and self._frag is None and not tr.dcfg.data_parallel:
-                state = tr.outer_sync(state, weights)
-            return state, metrics
-
-        return round_fn
+        if not self.share:
+            fn = self._local_rounds.get(key)
+            if fn is None:
+                fn = self._local_rounds[key] = build()
+            return fn
+        return jitcache.get_or_build(key, build, self._local_rounds)
 
     # ---- driving --------------------------------------------------------
     def run_round(self, state, start: int, length: Optional[int] = None, weights=None,
@@ -231,7 +301,7 @@ class SuperstepEngine:
         length = self.chunk if length is None else length
         end = start + length
         dcfg = self.trainer.dcfg
-        if not dcfg.data_parallel and self._frag is None:
+        if not dcfg.data_parallel and dcfg.streaming_fragments == 0:
             # a window crossing an interior H boundary would silently skip
             # that boundary's outer sync (the executable syncs only at its
             # end); run() splits windows so this can't happen
@@ -243,10 +313,13 @@ class SuperstepEngine:
                     f"sync_every={self.chunk} (engine.run does this)"
                 )
         do_sync = (end % self.chunk == 0) and not dcfg.data_parallel
-        xs = None
-        if not self._on_device_data:
+        xs = droot = dlogits = None
+        if self._on_device_data:
+            droot, dlogits = self.data._root, self.data._logits
+        else:
             xs = self._prefetch.get(start, length, next_length)
-        state, metrics = self._round_fn(length, do_sync)(state, xs, weights)
+        state, metrics = self._round_fn(length, do_sync)(
+            state, xs, droot, dlogits, weights)
         return state, jax.device_get(metrics)
 
     def round_bounds(self, step: int, steps: int) -> Tuple[int, int]:

@@ -1,1 +1,1 @@
-from repro.data.pipeline import SyntheticLM, TokenFileSource  # noqa: F401
+from repro.data.pipeline import SyntheticLM, TokenFileSource, synthetic_tokens  # noqa: F401

@@ -16,10 +16,38 @@ D_m (paper Algorithm 1 line 4) by folding the replica id into the PRNG key.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+@partial(jax.jit, static_argnums=(2, 3))
+def synthetic_tokens(logits: jax.Array, key: jax.Array, n_seqs: int, seq_len: int) -> jax.Array:
+    """Generate ``(n_seqs, seq_len+1)`` tokens from per-domain transition
+    logits of shape ``(n_domains, vocab, vocab)``.
+
+    Pure function of its operands: the transition table is an argument, not
+    a closure constant, so one compiled executable serves every
+    ``SyntheticLM`` instance with the same shapes (sweep cells differing
+    only in ``seed`` stop recompiling), and the cell-batched engine can
+    ``vmap`` it over a stacked per-cell table axis.
+    """
+    n_domains, vocab_size = logits.shape[0], logits.shape[1]
+    kd, k0, kc = jax.random.split(key, 3)
+    domains = jax.random.randint(kd, (n_seqs,), 0, n_domains)
+    first = jax.random.randint(k0, (n_seqs,), 0, vocab_size)
+    table = logits[domains]  # (n, V, V)
+
+    def step(tok, k):
+        nxt = jax.random.categorical(k, jnp.take_along_axis(
+            table, tok[:, None, None], axis=1)[:, 0, :])
+        return nxt, nxt
+
+    keys = jax.random.split(kc, seq_len)
+    _, seq = jax.lax.scan(step, first, keys)
+    return jnp.concatenate([first[None], seq], axis=0).T  # (n, L+1)
 
 
 @dataclasses.dataclass
@@ -42,24 +70,12 @@ class SyntheticLM:
         zipf = -jnp.log(jnp.arange(1, self.vocab_size + 1, dtype=jnp.float32))
         self._logits = logits + 0.5 * zipf[None, None, :]
         self._root = root
-        self._gen_jit = jax.jit(self._gen, static_argnums=(1,))
 
     # -- internals ---------------------------------------------------------
     def _gen(self, key: jax.Array, n_seqs: int) -> jax.Array:
-        """Generate (n_seqs, seq_len+1) tokens."""
-        kd, k0, kc = jax.random.split(key, 3)
-        domains = jax.random.randint(kd, (n_seqs,), 0, self.n_domains)
-        first = jax.random.randint(k0, (n_seqs,), 0, self.vocab_size)
-        table = self._logits[domains]  # (n, V, V)
-
-        def step(tok, k):
-            nxt = jax.random.categorical(k, jnp.take_along_axis(
-                table, tok[:, None, None], axis=1)[:, 0, :])
-            return nxt, nxt
-
-        keys = jax.random.split(kc, self.seq_len)
-        _, seq = jax.lax.scan(step, first, keys)
-        return jnp.concatenate([first[None], seq], axis=0).T  # (n, L+1)
+        """Generate (n_seqs, seq_len+1) tokens (traceable; shares the
+        module-level ``synthetic_tokens`` executable across instances)."""
+        return synthetic_tokens(self._logits, key, n_seqs, self.seq_len)
 
     # -- public API ------------------------------------------------------------
     def batch(self, step: int, replica: int, num_replicas: int, batch_seqs: int, *, eval: bool = False) -> dict:
@@ -69,7 +85,7 @@ class SyntheticLM:
             key = jax.random.fold_in(key, self.eval_offset)
         key = jax.random.fold_in(key, int(step))
         key = jax.random.fold_in(key, int(replica) + num_replicas * 7919)
-        toks = self._gen_jit(key, batch_seqs)
+        toks = self._gen(key, batch_seqs)
         return {"tokens": toks[:, :-1].astype(jnp.int32), "labels": toks[:, 1:].astype(jnp.int32)}
 
     def global_batch(self, step: int, num_replicas: int, batch_seqs_per_replica: int, *, eval: bool = False) -> dict:

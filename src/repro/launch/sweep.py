@@ -4,17 +4,35 @@ The paper's headline contribution is that DiLoCo's eval loss and optimal
 hyperparameters follow scaling laws in (N, M) that can be fit and
 extrapolated (§6).  This driver produces the data those fits consume: it
 expands a named ``SweepSpec`` grid (``repro.configs.sweeps``) into cells,
-runs each cell on the compiled superstep engine via
-``repro.launch.train.run_experiment``, and appends one record per cell to a
-versioned, append-only JSONL ledger under ``results/``.
+runs them on the compiled superstep engine, and appends one record per cell
+to a versioned, append-only JSONL ledger under ``results/``.
+
+Execution is three-tier, fastest applicable path first:
+
+* **stacked** — ``plan_groups`` partitions the ledger-incomplete cells into
+  shape-compatible groups (same arch / B / seq_len / M / H / steps /
+  sync-mode, differing only in lr / outer-lr / momentum / seed); each group
+  of >= 2 runs as ONE vmapped, donated executable on
+  ``repro.core.cellbatch.CellBatchEngine`` — per-cell results are
+  bitwise-identical to the sequential path;
+* **shared-executable** — singleton cells run sequentially via
+  ``run_experiment``, but trainers/engines cache executables process-wide
+  by static shape signature (``repro.core.jitcache``), so structurally
+  identical cells compile exactly once;
+* **persistent compilation cache** — the CLI enables
+  ``results/.xla_cache`` (``repro.launch.xla_cache``), so *re-runs* and CI
+  skip XLA compilation entirely.
 
 Fault tolerance is two-level:
 
 * **cell-level**: a completed cell's ledger record is durable (fsync'd
   append); re-running the sweep skips every cell already in the ledger.
-* **step-level**: each cell checkpoints into its own directory (the PR-2
-  elastic checkpoint subsystem), so a cell killed mid-run resumes from its
-  last checkpoint instead of step 0.
+* **step-level**: each *sequential* cell checkpoints into its own
+  directory (the PR-2 elastic checkpoint subsystem), so a cell killed
+  mid-run resumes from its last checkpoint instead of step 0.  Stacked
+  groups trade this in: they do not checkpoint mid-run (a kill re-runs the
+  group), and a cell that already has checkpoints is routed to the
+  sequential path so its resume is honored.
 
   PYTHONPATH=src python -m repro.launch.sweep --grid smoke
   PYTHONPATH=src python -m repro.launch.fit --ledger results/SWEEP_smoke.jsonl
@@ -28,10 +46,21 @@ import math
 import os
 import shutil
 import time
+from functools import lru_cache
+
+import numpy as np
 
 from repro.configs import get_config, get_sweep
 from repro.configs.sweeps import SweepSpec, default_lr
-from repro.launch.train import ExperimentConfig, run_experiment
+from repro.core.cellbatch import CellBatchEngine
+from repro.launch.train import (
+    ExperimentConfig,
+    ExperimentResult,
+    _eval_stats,
+    make_run,
+    run_experiment,
+    simulate_cell,
+)
 from repro.models import build_model
 
 LEDGER_SCHEMA = 1
@@ -42,59 +71,86 @@ LEDGER_SCHEMA = 1
 # ---------------------------------------------------------------------------
 
 
+@lru_cache(maxsize=None)
+def _arch_param_count(arch: str) -> int:
+    """N for one arch.  ``param_count`` is a pure function of the config, so
+    memoizing makes grid expansion O(archs) model builds instead of
+    O(archs x batch axes) — `paper`-scale grids build each Chinchilla model
+    once, not once per batch size."""
+    return build_model(get_config(arch)).param_count()
+
+
 def _resolve_steps(sweep: SweepSpec, arch: str, batch_tokens: int) -> int:
     if sweep.steps:
         return sweep.steps
-    n_params = build_model(get_config(arch)).param_count()
-    return max(int(sweep.budget_mult * n_params / batch_tokens), sweep.min_steps)
+    return max(
+        int(sweep.budget_mult * _arch_param_count(arch) / batch_tokens),
+        sweep.min_steps,
+    )
 
 
 def expand_grid(sweep: SweepSpec) -> list:
     """Cross product of the grid axes, normalized so equivalent cells get
     identical specs: dp ignores the M / H / outer-optimizer axes (emitted
-    once per (arch, B) with M=1), streaming resolves its fragment count.
-    Cheapest-first (by N then steps) so partial sweeps are useful."""
+    once per (arch, B, lr, seed) with M=1), streaming resolves its fragment
+    count.  Cheapest-first (by N then steps) so partial sweeps are useful."""
     cells = []
     seen = set()
     for arch in sweep.archs:
+        base_lr = sweep.lr or default_lr(get_config(arch).d_model)
+        lrs = sweep.lrs or (base_lr,)
+        outer_lrs = sweep.outer_lrs or (sweep.outer_lr,)
+        seeds = sweep.seeds or (sweep.seed,)
         for batch_tokens in sweep.batch_tokens:
             steps = _resolve_steps(sweep, arch, batch_tokens)
-            lr = sweep.lr or default_lr(get_config(arch).d_model)
             for mode in sweep.modes:
                 for m in sweep.replicas:
                     for h in sweep.sync_every:
-                        spec = {
-                            "arch": arch,
-                            "mode": mode,
-                            "m": m if mode != "dp" else 1,
-                            "h": h if mode != "dp" else 1,
-                            "batch_tokens": batch_tokens,
-                            "seq_len": sweep.seq_len,
-                            "steps": steps,
-                            "lr": round(lr, 8),
-                            "outer_lr": sweep.outer_lr if mode != "dp" else 0.0,
-                            "outer_momentum": sweep.outer_momentum if mode != "dp" else 0.0,
-                            "nesterov": sweep.nesterov if mode != "dp" else False,
-                            "streaming_fragments": (
-                                min(sweep.streaming_fragments, h)
-                                if mode == "streaming" else 0
-                            ),
-                            "seed": sweep.seed,
-                            "engine": sweep.engine,
-                        }
-                        cid = cell_id(spec)
-                        if cid not in seen:  # dp collapses the M/H axes
-                            seen.add(cid)
-                            cells.append(spec)
+                        for lr in lrs:
+                            for outer_lr in outer_lrs:
+                                for seed in seeds:
+                                    spec = {
+                                        "arch": arch,
+                                        "mode": mode,
+                                        "m": m if mode != "dp" else 1,
+                                        "h": h if mode != "dp" else 1,
+                                        "batch_tokens": batch_tokens,
+                                        "seq_len": sweep.seq_len,
+                                        "steps": steps,
+                                        "lr": round(lr, 8),
+                                        "outer_lr": outer_lr if mode != "dp" else 0.0,
+                                        "outer_momentum": sweep.outer_momentum if mode != "dp" else 0.0,
+                                        "nesterov": sweep.nesterov if mode != "dp" else False,
+                                        "streaming_fragments": (
+                                            min(sweep.streaming_fragments, h)
+                                            if mode == "streaming" else 0
+                                        ),
+                                        "seed": seed,
+                                        "engine": sweep.engine,
+                                    }
+                                    cid = cell_id(spec)
+                                    if cid not in seen:  # dp collapses M/H/outer axes
+                                        seen.add(cid)
+                                        cells.append(spec)
     cells.sort(key=lambda s: (get_config(s["arch"]).d_model, s["steps"], s["m"]))
     return cells
 
 
 def cell_id(spec: dict) -> str:
     """Stable content hash of a cell spec (independent of the sweep name, so
-    identical cells dedupe across grids sharing a ledger)."""
+    identical cells dedupe across grids sharing a ledger).
+
+    ``engine`` is EXCLUDED from the hash: the engines are proven
+    bitwise-equivalent (PR 1), so a ledger produced on one engine dedupes
+    cells for the other instead of silently re-running the whole grid.  The
+    engine that actually ran is still recorded in the ledger record's
+    ``config``.  Migration note: this changed every id relative to
+    pre-PR-4 ledgers — old ledgers no longer dedupe (cells re-run once and
+    re-append under their new ids).
+    """
+    payload = {k: v for k, v in spec.items() if k != "engine"}
     return hashlib.sha1(
-        json.dumps(spec, sort_keys=True).encode()
+        json.dumps(payload, sort_keys=True).encode()
     ).hexdigest()[:12]
 
 
@@ -125,6 +181,126 @@ def cell_config(sweep: SweepSpec, spec: dict, checkpoint_root: str) -> Experimen
         checkpoint_every=sweep.checkpoint_every,
         resume=bool(ckpt_dir),
     )
+
+
+# ---------------------------------------------------------------------------
+# Stacking planner + batched runner
+# ---------------------------------------------------------------------------
+
+
+def stack_key(spec: dict) -> tuple:
+    """Cells sharing this key are shape-compatible: they trace to identical
+    jaxprs and may stack along a leading cell axis.  Everything NOT here
+    (lr, outer_lr, outer_momentum, seed) is a traced per-cell array."""
+    return (
+        spec["arch"], spec["mode"], spec["m"], spec["h"],
+        spec["batch_tokens"], spec["seq_len"], spec["steps"],
+        spec["nesterov"], spec["streaming_fragments"],
+    )
+
+
+def _has_checkpoint(checkpoint_root: str, cid: str) -> bool:
+    d = os.path.join(checkpoint_root, cid)
+    if not os.path.isdir(d):
+        return False
+    return any(
+        e.startswith("step_") and not e.endswith(".tmp") for e in os.listdir(d)
+    )
+
+
+def plan_groups(
+    cells: list,
+    *,
+    checkpoint_root: str = "",
+    max_group: int = 8,
+    min_group: int = 2,
+) -> dict:
+    """Partition cells into stackable groups: ``{cell_id: group}`` where
+    ``group`` is the list of specs that run together (chunked to
+    ``max_group`` to bound device memory).  Cells absent from the plan run
+    sequentially: singletons, non-superstep engines, and cells with
+    existing checkpoints (stacked runs don't checkpoint mid-run, so a
+    resumable cell keeps its step-level resume on the sequential path)."""
+    buckets: dict = {}
+    for spec in cells:
+        if spec.get("engine", "superstep") != "superstep":
+            continue
+        if checkpoint_root and _has_checkpoint(checkpoint_root, cell_id(spec)):
+            continue
+        buckets.setdefault(stack_key(spec), []).append(spec)
+    plan = {}
+    for members in buckets.values():
+        for i in range(0, len(members), max_group):
+            chunk = members[i:i + max_group]
+            if len(chunk) >= min_group:
+                for s in chunk:
+                    plan[cell_id(s)] = chunk
+    return plan
+
+
+def run_cell_batch(
+    sweep: SweepSpec, specs: list, checkpoint_root: str = "", *, quiet: bool = True
+) -> list:
+    """Run K stackable cells as one vmapped executable; return one ledger
+    record per cell, in ``specs`` order, matching the sequential
+    ``run_experiment`` records field-for-field (eval losses bitwise-equal;
+    only ``runtime_s`` — here the batch wall-clock split evenly — differs).
+    """
+    t0 = time.time()
+    configs, trainers, datas = [], [], []
+    cfg0 = steps = None
+    for spec in specs:
+        config = cell_config(sweep, spec, checkpoint_root)
+        cfg, trainer, data, steps = make_run(config)
+        configs.append(config)
+        trainers.append(trainer)
+        datas.append(data)
+        cfg0 = cfg
+    seqs_per_replica = max(
+        1, specs[0]["batch_tokens"] // specs[0]["seq_len"] // trainers[0].M)
+    engine = CellBatchEngine(trainers, datas, seqs_per_replica)
+    states = engine.init_states([spec["seed"] for spec in specs])
+    states, mets = engine.run(states, steps)
+    losses = np.asarray(mets["loss"])  # (K, steps)
+
+    n_params = _arch_param_count(specs[0]["arch"])
+    runtime = time.time() - t0
+    cell_states = engine.unstack(states)
+    records = []
+    for k, (spec, config, trainer, data) in enumerate(
+            zip(specs, configs, trainers, datas)):
+        eval_seqs = config.eval_seqs or max(1, config.batch_tokens // config.seq_len)
+        final_eval, sem = _eval_stats(
+            config.eval_batches, data, cell_states[k],
+            trainer.jit_eval_step(), eval_seqs)
+        history = [
+            {"step": i + 1, "loss": float(losses[k, i])} for i in range(steps)
+        ]
+        # final_train through the same float64 host path as run_experiment
+        # (a float32 array mean would drift in the last bits)
+        last = [h["loss"] for h in history[-10:]]
+        result = ExperimentResult(
+            config=config,
+            arch=cfg0.name,
+            n_params=n_params,
+            steps=steps,
+            start_step=0,
+            tokens=steps * config.batch_tokens,
+            final_eval=final_eval,
+            final_eval_sem=sem,
+            final_train=float(np.mean(last)) if last else float("nan"),
+            runtime_s=runtime / len(specs),
+            history=history,
+            sim=simulate_cell(n_params, steps * config.batch_tokens, config),
+        )
+        records.append(_json_safe({
+            "schema": LEDGER_SCHEMA,
+            "cell": cell_id(spec),
+            "sweep": sweep.name,
+            "spec": spec,
+            **result.to_record(),
+        }))
+    return records
 
 
 # ---------------------------------------------------------------------------
@@ -188,17 +364,27 @@ def run_sweep(
     force: bool = False,
     clean: bool = False,
     quiet: bool = False,
+    stack: bool = True,
+    stack_max: int = 8,
 ) -> list:
     """Run every grid cell not already in the ledger.
 
     Returns ``[{"cell", "spec", "skipped", "record"}, ...]`` in grid order.
     ``max_cells`` stops after that many cells actually ran (0 = no limit);
     ``clean`` removes a cell's checkpoint directory once its record is
-    durable in the ledger.
+    durable in the ledger; ``stack=False`` forces every cell onto the
+    sequential path (``stack_max`` bounds a stacked group's size).
     """
     cells = expand_grid(sweep)
     done = {} if force else read_ledger(ledger_path)
+    pending = [s for s in cells if cell_id(s) not in done]
+    plan = (
+        plan_groups(pending, checkpoint_root=checkpoint_root,
+                    max_group=stack_max)
+        if stack else {}
+    )
     out, ran = [], 0
+    stacked_recs: dict = {}
     for i, spec in enumerate(cells):
         cid = cell_id(spec)
         if cid in done:
@@ -207,9 +393,31 @@ def run_sweep(
             out.append({"cell": cid, "spec": spec, "skipped": True,
                         "record": done[cid]})
             continue
+        if cid in stacked_recs:
+            # this cell's group already ran (and its record is durable)
+            rec = stacked_recs.pop(cid)
+            out.append({"cell": cid, "spec": spec, "skipped": False,
+                        "record": rec})
+            continue
         if max_cells and ran >= max_cells:
             break
         t0 = time.time()
+        group = plan.get(cid)
+        if group is not None and (not max_cells or ran + len(group) <= max_cells):
+            recs = run_cell_batch(sweep, group, checkpoint_root, quiet=quiet)
+            for s2, r2 in zip(group, recs):
+                append_record(ledger_path, r2)
+                stacked_recs[cell_id(s2)] = r2
+            ran += len(group)
+            rec = stacked_recs.pop(cid)
+            if not quiet:
+                print(f"[{i + 1}/{len(cells)}] {cid} "
+                      f"eval={rec['final_eval']:.4f} "
+                      f"(stacked x{len(group)}, "
+                      f"{time.time() - t0:.1f}s total): {spec}", flush=True)
+            out.append({"cell": cid, "spec": spec, "skipped": False,
+                        "record": rec})
+            continue
         config = cell_config(sweep, spec, checkpoint_root)
         result = run_experiment(config, quiet=True)
         rec = _json_safe({
@@ -248,11 +456,22 @@ def build_argparser():
                     help="re-run cells even if already in the ledger")
     ap.add_argument("--clean", action="store_true",
                     help="delete a cell's checkpoints once its record is durable")
+    ap.add_argument("--no-stack", dest="stack", action="store_false",
+                    help="run every cell sequentially (disable cell batching)")
+    ap.add_argument("--stack-max", type=int, default=8,
+                    help="max cells stacked into one executable")
+    ap.add_argument("--no-xla-cache", dest="xla_cache", action="store_false",
+                    help="disable the persistent compilation cache "
+                         "(results/.xla_cache)")
     return ap
 
 
 def main():
     args = build_argparser().parse_args()
+    if args.xla_cache:
+        from repro.launch import xla_cache
+
+        xla_cache.enable()
     sweep = get_sweep(args.grid)
     ledger = args.ledger or os.path.join("results", f"SWEEP_{sweep.name}.jsonl")
     ckpt_root = args.checkpoint_root or os.path.join(
@@ -263,7 +482,8 @@ def main():
     print(f"sweep {sweep.name}: {len(cells)} cells -> {ledger}")
     results = run_sweep(sweep, ledger, ckpt_root,
                         max_cells=args.max_cells, force=args.force,
-                        clean=args.clean)
+                        clean=args.clean, stack=args.stack,
+                        stack_max=args.stack_max)
     ran = sum(1 for r in results if not r["skipped"])
     print(f"done: {ran} ran, {sum(1 for r in results if r['skipped'])} skipped, "
           f"{len(cells) - len(results)} remaining")

@@ -203,6 +203,9 @@ def build_argparser():
     ap.add_argument("--straggler-rate", type=float, default=0.0,
                     help="probability a replica misses an outer sync (fault-tolerance demo)")
     ap.add_argument("--metrics-out", default="")
+    ap.add_argument("--no-xla-cache", dest="xla_cache", action="store_false",
+                    help="disable the persistent compilation cache "
+                         "(results/.xla_cache)")
     return ap
 
 
@@ -313,7 +316,7 @@ def _superstep_loop(args, trainer, data, steps, state, start, ckpt, *,
 
 def _superstep_rounds(args, trainer, data, steps, state, start, ckpt, engine, *,
                       seqs_per_replica, quiet):
-    eval_step = jax.jit(trainer.eval_step)
+    eval_step = trainer.jit_eval_step()
     rng = np.random.default_rng(args.seed + 99)
     m = trainer.M
     H = engine.chunk
@@ -357,7 +360,7 @@ def _per_step_loop(args, trainer, data, steps, state, start, ckpt, *,
     frag = (streaming.FragmentSync(trainer)
             if trainer.dcfg.streaming_fragments > 0 and not trainer.dcfg.data_parallel
             else None)
-    eval_step = jax.jit(trainer.eval_step)
+    eval_step = trainer.jit_eval_step()
     rng = np.random.default_rng(args.seed + 99)
     history = []
     t0 = time.time()
@@ -411,11 +414,11 @@ def run_experiment(config: ExperimentConfig, *, quiet: bool = True) -> Experimen
             state, history = train_loop(config, trainer, data, steps, mesh=mesh,
                                         quiet=quiet)
             final_eval, sem = _eval_stats(config.eval_batches, data, state,
-                                          jax.jit(trainer.eval_step), eval_seqs)
+                                          trainer.jit_eval_step(), eval_seqs)
     else:
         state, history = train_loop(config, trainer, data, steps, quiet=quiet)
         final_eval, sem = _eval_stats(config.eval_batches, data, state,
-                                      jax.jit(trainer.eval_step), eval_seqs)
+                                      trainer.jit_eval_step(), eval_seqs)
     runtime_s = time.time() - t0
 
     final_step = int(np.asarray(state["step"]))
@@ -438,6 +441,10 @@ def run_experiment(config: ExperimentConfig, *, quiet: bool = True) -> Experimen
 
 def main():
     args = build_argparser().parse_args()
+    if getattr(args, "xla_cache", True):
+        from repro.launch import xla_cache
+
+        xla_cache.enable()
     config = ExperimentConfig.from_args(args)
     cfg, trainer, _, steps = make_run(config)  # banner from the same budget rule
     print(f"arch={cfg.name} N={trainer.model.param_count()/1e6:.2f}M params "

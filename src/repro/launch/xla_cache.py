@@ -1,0 +1,46 @@
+"""Opt-in JAX persistent compilation cache for the launch entry points.
+
+A sweep re-run (or a CI job) pays full XLA compilation for every distinct
+cell shape even though nothing changed since the last run.  JAX's
+persistent compilation cache keys compiled executables by a hash of the
+HLO + compile options and stores them on disk, so a warm cache skips
+backend compilation entirely — with hyperparameters traced through the
+state (``repro.core.diloco``), a re-run of a whole grid typically compiles
+nothing.
+
+``enable()`` points the cache at ``results/.xla_cache`` (override with the
+``REPRO_XLA_CACHE_DIR`` env var; set it to ``off`` / ``0`` / ``none`` to
+disable).  Thresholds are zeroed because sweep cells are tiny models whose
+compiles fall under JAX's default 1s / 0-byte gates.  Safe to call more
+than once; returns the cache dir, or None when disabled/unsupported.
+
+The cache is content-addressed and append-only: deleting the directory is
+always safe (the next run just recompiles), and it can be relocated by
+pointing the env var elsewhere — see README "Batched sweeps & the
+compilation cache".
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+DEFAULT_DIR = os.path.join("results", ".xla_cache")
+_OFF = {"off", "0", "none", "false"}
+
+
+def enable(path: str = "") -> Optional[str]:
+    """Enable the persistent compilation cache; return its dir (or None)."""
+    env = os.environ.get("REPRO_XLA_CACHE_DIR", "")
+    if env.lower() in _OFF:
+        return None
+    cache_dir = os.path.abspath(path or env or DEFAULT_DIR)
+    try:
+        import jax
+
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        # sweep cells are tiny: without zeroed gates nothing would qualify
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except Exception:
+        return None  # older jax without the knobs: run uncached
+    return cache_dir

@@ -51,7 +51,17 @@ def adamw_update(
     weight_decay: float = 0.0,
     use_kernel: bool = False,
 ) -> Tuple:
-    """One AdamW step. Moments in fp32; params keep their dtype."""
+    """One AdamW step. Moments in fp32; params keep their dtype.
+
+    ``lr`` / ``weight_decay`` may be Python scalars or traced 0-d arrays on
+    the default (jnp) path — the trainer passes traced ``hparams`` so
+    lr-sweep cells share executables.  ``b1``/``b2``/``eps`` stay static —
+    they are not sweep axes and ``b1 ** c`` folds at compile time.  The
+    ``use_kernel=True`` Pallas path still requires a STATIC
+    ``weight_decay`` (the kernel closes over it rather than reading the
+    scalars operand); route it through ``k_ops`` scalars before enabling
+    the fused kernel on the trainer path.
+    """
     count = state["count"] + 1
     c = count.astype(jnp.float32)
     bc1 = 1.0 - b1 ** c

@@ -1,10 +1,20 @@
-"""Learning-rate schedules (paper §3: 1000-step warmup, cosine to 5% peak)."""
+"""Learning-rate schedules (paper §3: 1000-step warmup, cosine to 5% peak).
+
+``peak_lr`` / ``warmup`` may be Python scalars OR traced 0-d arrays.  The
+trainer passes them as arrays (the state's ``hparams`` leaf) so sweeps over
+lr share one executable; ``total`` stays static (it is a schedule-shape
+constant, part of the trainer's static signature).  Caveat: under jit the
+two forms can differ by ~1 ulp — XLA constant-folds a Python-scalar
+``warmup`` (divide -> multiply-by-reciprocal) but keeps a traced operand
+as a true divide — so traced-vs-traced runs are mutually consistent while
+traced-vs-baked is only equal to float rounding.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int, final_ratio: float = 0.05):
+def warmup_cosine(step, *, peak_lr, warmup, total: int, final_ratio: float = 0.05):
     step = jnp.asarray(step, jnp.float32)
     warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
     # cosine from end of warmup to `total`

@@ -300,6 +300,48 @@ def test_elastic_restore_grows_error_feedback(tmp_path):
     assert int(restored["step"]) == 8
 
 
+def test_restore_fills_hparams_for_pre_hparams_checkpoints(tmp_path):
+    """Migration: checkpoints written before the state carried the traced
+    ``hparams`` leaf restore with hparams filled from the current config —
+    the same values the old executables had baked in as constants."""
+    trainer, data = _mk(m=2, h=4)
+    state = _advance(trainer, data, trainer.init_state(jax.random.PRNGKey(0)), 0, 2)
+    legacy = {k: v for k, v in state.items() if k != "hparams"}
+    Checkpointer(str(tmp_path), trainer=trainer).save(legacy, 2)
+
+    restored, step = Checkpointer(str(tmp_path), trainer=trainer).restore()
+    assert step == 2
+    assert restored["hparams"]["peak_lr"] == np.float32(trainer.ocfg.peak_lr)
+    assert restored["hparams"]["outer_lr"] == np.float32(trainer.dcfg.outer_lr)
+    assert restored["hparams"]["weight_decay"] == np.float32(trainer.weight_decay)
+    _assert_tree_equal(restored["inner_params"], state["inner_params"])
+    # the restored state drives the donating executables directly
+    out, _ = trainer.jit_inner_step()(restored, data.global_batch(2, 2, 1))
+    assert int(out["step"]) == 3
+
+
+def test_restore_hparams_follow_current_config_not_checkpoint(tmp_path):
+    """Relaunching with a changed lr must apply the NEW config on resume
+    (the pre-traced-hparams behavior, when the new value was baked into
+    fresh executables) — the checkpoint's hparams leaves must not silently
+    override it.  The fingerprint warning flags the drift."""
+    tr_a, data = _mk(m=2, h=4)
+    state = _advance(tr_a, data, tr_a.init_state(jax.random.PRNGKey(0)), 0, 2)
+    Checkpointer(str(tmp_path), trainer=tr_a).save(state, 2)
+
+    cfg = get_config("tiny-t0")
+    tr_b = make_trainer(
+        build_model(cfg),
+        DiLoCoConfig(num_replicas=2, sync_every=4, outer_lr=0.123),
+        OptimizerConfig(peak_lr=9e-4, warmup_steps=2),
+        TrainConfig(global_batch_tokens=2 * 128, seq_len=128, steps=20),
+    )
+    with pytest.warns(UserWarning, match="fingerprint"):
+        restored, _ = Checkpointer(str(tmp_path), trainer=tr_b).restore()
+    assert restored["hparams"]["peak_lr"] == np.float32(9e-4)
+    assert restored["hparams"]["outer_lr"] == np.float32(0.123)
+
+
 def test_elastic_restore_rejected_for_data_parallel(tmp_path):
     trainer, _ = _mk(m=1, data_parallel=True)
     Checkpointer(str(tmp_path), trainer=trainer).save(
@@ -331,7 +373,8 @@ def test_resized_fresh_replica_first_update_is_cold_start_adamw():
     # fresh replica's own data shard at the same lr-schedule step
     gp = state["global_params"]
     shard = jax.tree.map(lambda x: x[2], batch)
-    p_ref, opt_ref, _ = trainer._replica_step(gp, adamw_init(gp), shard, state["step"])
+    p_ref, opt_ref, _ = trainer._replica_step(
+        gp, adamw_init(gp), shard, state["step"], state["hparams"])
 
     assert int(np.asarray(stepped["inner_opt"]["count"])[2]) == 1
     for a, b in zip(jax.tree.leaves(stepped["inner_params"]),

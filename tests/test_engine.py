@@ -1,5 +1,8 @@
 """Superstep engine tests: per-step equivalence, donation, data prefetch,
-and the streaming fragment schedule/config regressions."""
+cell batching, cross-trainer executable sharing, and the streaming
+fragment schedule/config regressions."""
+import threading
+
 import numpy as np
 import pytest
 
@@ -7,13 +10,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import DiLoCoConfig, OptimizerConfig, TrainConfig, get_config
-from repro.core import streaming
-from repro.core.diloco import make_trainer
+from repro.core import jitcache, streaming
+from repro.core.cellbatch import CellBatchEngine
+from repro.core.diloco import make_trainer, static_signature
 from repro.core.superstep import RoundPrefetcher, SuperstepEngine, device_batch_fn
 from repro.data import SyntheticLM, TokenFileSource
 
 
-def _trainer(m=2, h=4, **kw):
+def _trainer(m=2, h=4, peak_lr=1e-3, data_seed=1234, **kw):
     cfg = get_config("tiny-t0")
     from repro.models import build_model
 
@@ -22,9 +26,9 @@ def _trainer(m=2, h=4, **kw):
     dkw = dict(num_replicas=m, sync_every=h)
     dkw.update(kw)
     trainer = make_trainer(
-        model, DiLoCoConfig(**dkw), OptimizerConfig(peak_lr=1e-3, warmup_steps=5), tcfg
+        model, DiLoCoConfig(**dkw), OptimizerConfig(peak_lr=peak_lr, warmup_steps=5), tcfg
     )
-    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=128)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=128, seed=data_seed)
     return trainer, data
 
 
@@ -129,6 +133,115 @@ def test_token_file_eval_is_held_out(tmp_path):
     assert int(np.min(eval_b["tokens"])) >= 30 * 4
 
 
+# ---------------------------------------------------------------------------
+# cell batching: K stacked cells == K sequential runs, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+def test_cellbatch_matches_superstep_per_cell(mode):
+    """A stacked K-cell round must reproduce each cell's sequential
+    superstep run bitwise — final state AND per-step losses — for every
+    sync mode, with cells differing in inner lr, outer lr, and data seed
+    (the traced hyperparameter axes)."""
+    kw = dict(MODES[mode])
+    m = kw.pop("m")
+    steps, h, seqs = 6, 4, 2
+    variants = [
+        dict(peak_lr=1e-3, data_seed=11, outer_lr=0.7, seed=0),
+        dict(peak_lr=2e-3, data_seed=22, outer_lr=0.5, seed=1),
+    ]
+
+    refs = []
+    for v in variants:
+        vkw = dict(kw)
+        if not vkw.get("data_parallel"):
+            vkw["outer_lr"] = v["outer_lr"]
+        tr, data = _trainer(m=m, h=h, peak_lr=v["peak_lr"],
+                            data_seed=v["data_seed"], **vkw)
+        state = tr.init_state(jax.random.PRNGKey(v["seed"]))
+        state, mets = SuperstepEngine(tr, data, seqs).run(state, steps)
+        refs.append((state, mets))
+
+    trainers, datas = [], []
+    for v in variants:
+        vkw = dict(kw)
+        if not vkw.get("data_parallel"):
+            vkw["outer_lr"] = v["outer_lr"]
+        tr, data = _trainer(m=m, h=h, peak_lr=v["peak_lr"],
+                            data_seed=v["data_seed"], **vkw)
+        trainers.append(tr)
+        datas.append(data)
+    engine = CellBatchEngine(trainers, datas, seqs)
+    states = engine.init_states([v["seed"] for v in variants])
+    states, mets = engine.run(states, steps)
+    assert mets["loss"].shape == (2, steps)
+
+    for k, (ref_state, ref_mets) in enumerate(refs):
+        np.testing.assert_array_equal(mets["loss"][k], ref_mets["loss"])
+        cell = engine.unstack(states)[k]
+        assert int(cell["step"]) == int(ref_state["step"]) == steps
+        for key in ref_state:
+            for a, b in zip(jax.tree.leaves(cell[key]),
+                            jax.tree.leaves(ref_state[key])):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"mode={mode} cell={k} state[{key!r}]",
+                )
+
+
+def test_cellbatch_rejects_mixed_shapes_and_file_data(tmp_path):
+    tr1, d1 = _trainer(m=2, h=4)
+    tr2, d2 = _trainer(m=2, h=8)  # different H -> different signature
+    with pytest.raises(ValueError, match="static signature"):
+        CellBatchEngine([tr1, tr2], [d1, d2], 1)
+    path = tmp_path / "t.bin"
+    np.arange(0, 2000, dtype=np.uint16).tofile(path)
+    tfs = TokenFileSource(str(path), seq_len=128)
+    tr3, _ = _trainer(m=2, h=4)
+    with pytest.raises(ValueError, match="SyntheticLM"):
+        CellBatchEngine([tr1, tr3], [d1, tfs], 1)
+
+
+# ---------------------------------------------------------------------------
+# cross-trainer executable sharing (jitcache)
+# ---------------------------------------------------------------------------
+
+
+def test_trainers_differing_only_in_hparams_share_executables():
+    """lr / outer-lr / momentum are traced through the state's hparams
+    leaf, so same-shape trainers share one compiled entry point; a
+    structural difference (H) must NOT share."""
+    tr_a, data = _trainer(m=2, h=4, peak_lr=1e-3)
+    tr_b, _ = _trainer(m=2, h=4, peak_lr=3e-3, outer_lr=0.4)
+    tr_c, _ = _trainer(m=2, h=8)
+    assert static_signature(tr_a) == static_signature(tr_b)
+    assert static_signature(tr_a) != static_signature(tr_c)
+    assert tr_a.jit_inner_step() is tr_b.jit_inner_step()
+    assert tr_a.jit_inner_step() is not tr_c.jit_inner_step()
+
+    eng_a = SuperstepEngine(tr_a, data, 2)
+    eng_b = SuperstepEngine(tr_b, SyntheticLM(
+        vocab_size=data.vocab_size, seq_len=128, seed=77), 2)
+    assert eng_a._round_fn(4, True) is eng_b._round_fn(4, True)
+    # ...and the shared executable still gives each trainer its own lr
+    sa = tr_a.init_state(jax.random.PRNGKey(0))
+    sb = tr_b.init_state(jax.random.PRNGKey(0))
+    assert float(sa["hparams"]["peak_lr"]) != float(sb["hparams"]["peak_lr"])
+    fn = tr_a.jit_inner_step(donate=False)
+    batch = data.global_batch(0, 2, 2)
+    _, met_a = fn(sa, batch)
+    _, met_b = fn(sb, batch)
+    assert float(met_a["lr"]) != float(met_b["lr"])
+
+
+def test_sharing_can_be_disabled():
+    with jitcache.sharing(False):
+        tr_a, _ = _trainer(m=2, h=4)
+        tr_b, _ = _trainer(m=2, h=4)
+        assert tr_a.jit_inner_step() is not tr_b.jit_inner_step()
+
+
 def test_round_prefetcher_double_buffers():
     data = SyntheticLM(vocab_size=32, seq_len=16)
     pf = RoundPrefetcher(data, num_replicas=2, batch_seqs=1)
@@ -138,6 +251,37 @@ def test_round_prefetcher_double_buffers():
     xs2 = pf.get(3, 3)
     ref = data.global_batch(4, 2, 1)
     np.testing.assert_array_equal(np.asarray(xs2["tokens"][1]), np.asarray(ref["tokens"]))
+
+
+def test_round_prefetcher_close_cancels_inflight_build(monkeypatch):
+    """close() must stop an already-running _build before its device_put:
+    a speculative batch must never land on device after close (it would
+    stay pinned for the engine's lifetime)."""
+    started, release = threading.Event(), threading.Event()
+
+    class SlowSource:
+        def global_batch(self, step, m, bs):
+            started.set()
+            release.wait(timeout=10)
+            return {"tokens": np.zeros((m, bs, 4), np.int32)}
+
+    puts = []
+    real_put = jax.device_put
+    monkeypatch.setattr(jax, "device_put", lambda x: (puts.append(1), real_put(x))[1])
+
+    pf = RoundPrefetcher(SlowSource(), num_replicas=1, batch_seqs=1)
+    pf.schedule(0, 3)   # starts running, blocks in global_batch
+    pf.schedule(3, 3)   # queued behind it
+    assert started.wait(10)
+    queued = pf._pending[(3, 3)]
+    fut = pf._pending[(0, 3)]
+    pf.close()
+    release.set()
+    assert fut.result(timeout=10) is None   # in-flight build bailed
+    assert queued.cancelled()               # queued build never started
+    assert puts == []                       # nothing materialized on device
+    with pytest.raises(RuntimeError, match="closed"):
+        pf.get(0, 3)
 
 
 def test_donated_entry_points_consume_state():

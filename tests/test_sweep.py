@@ -1,5 +1,6 @@
 """Scaling-law sweep subsystem: grid expansion, ledger, per-cell resume,
-run_experiment, and the fit stage."""
+run_experiment, the stacking planner + cell-batched runner, and the fit
+stage."""
 import json
 import math
 import os
@@ -11,12 +12,16 @@ from repro.configs import get_sweep
 from repro.configs.sweeps import SweepSpec
 from repro.launch.fit import fit_ledger
 from repro.launch.sweep import (
+    _arch_param_count,
     append_record,
     cell_config,
     cell_id,
     expand_grid,
+    plan_groups,
     read_ledger,
+    run_cell_batch,
     run_sweep,
+    stack_key,
 )
 from repro.launch.train import ExperimentConfig, run_experiment, simulate_cell
 
@@ -70,6 +75,152 @@ def test_paper_grid_is_the_papers_axes():
     assert {c["m"] for c in cells if c["mode"] == "diloco"} == {1, 2, 4, 8}
     assert len({c["arch"] for c in cells}) == 7
     assert all(c["h"] in (1, 30) for c in cells)
+
+
+def test_cell_id_is_engine_independent():
+    """PR 1 proved the engines bitwise-equivalent, so a ledger produced on
+    one engine must dedupe cells for the other: ``engine`` stays in the
+    spec/record but is excluded from the id hash."""
+    (spec,) = expand_grid(TINY.replace(modes=("diloco",)))
+    assert spec["engine"] == "superstep"
+    other = {**spec, "engine": "per-step"}
+    assert cell_id(spec) == cell_id(other)
+    # every other field still changes the id
+    assert cell_id({**spec, "lr": 9e-9}) != cell_id(spec)
+    assert cell_id({**spec, "seed": 123}) != cell_id(spec)
+
+
+def test_param_count_memoized_per_arch(monkeypatch):
+    """Grid expansion must build each arch's model once, not once per
+    (arch, batch_tokens) pair — param_count is a pure function of the
+    config."""
+    from repro.launch import sweep as sweep_mod
+
+    _arch_param_count.cache_clear()
+    calls = []
+    real = sweep_mod.build_model
+
+    def counting(cfg):
+        calls.append(cfg.name)
+        return real(cfg)
+
+    monkeypatch.setattr(sweep_mod, "build_model", counting)
+    sw = TINY.replace(steps=0, min_steps=2,
+                      batch_tokens=(512, 1024, 2048))
+    cells = expand_grid(sw)
+    assert len({c["batch_tokens"] for c in cells}) == 3
+    assert len(calls) == 1  # one arch -> one model build
+    expand_grid(sw)
+    assert len(calls) == 1  # re-expansion is free
+
+
+# ---------------------------------------------------------------------------
+# Stacking planner
+# ---------------------------------------------------------------------------
+
+
+def test_smoke_stack_grid_is_one_stackable_group():
+    cells = expand_grid(get_sweep("smoke-stack"))
+    assert len(cells) == 6
+    assert len({stack_key(c) for c in cells}) == 1
+    assert {(c["lr"], c["seed"]) for c in cells} == {
+        (lr, s) for lr in (3e-3, 2e-3, 1e-3) for s in (0, 1)}
+    plan = plan_groups(cells)
+    assert set(plan) == {cell_id(c) for c in cells}
+    (group,) = {id(g): g for g in plan.values()}.values()
+    assert len(group) == 6
+
+
+def test_plan_groups_rules(tmp_path):
+    sw = TINY.replace(modes=("dp", "diloco"), seeds=(0, 1))
+    cells = expand_grid(sw)  # 2 dp + 2 diloco (seed axis)
+    plan = plan_groups(cells)
+    assert len(plan) == 4
+    groups = {id(g): g for g in plan.values()}.values()
+    assert sorted(len(g) for g in groups) == [2, 2]
+    for g in groups:  # dp and diloco never stack together
+        assert len({s["mode"] for s in g}) == 1
+
+    # max_group chunks an oversized bucket; the leftover singleton runs
+    # sequentially (absent from the plan)
+    cells5 = expand_grid(TINY.replace(modes=("diloco",), seeds=(0, 1, 2, 3, 4)))
+    plan5 = plan_groups(cells5, max_group=2)
+    assert len(plan5) == 4
+    assert sorted(len(g) for g in {id(g): g for g in plan5.values()}.values()) == [2, 2]
+
+    # a cell with existing checkpoints keeps its step-level resume: it is
+    # routed to the sequential path
+    victim = cells[0]
+    os.makedirs(tmp_path / cell_id(victim) / "step_0000000002")
+    plan_ck = plan_groups(cells, checkpoint_root=str(tmp_path))
+    assert cell_id(victim) not in plan_ck
+
+    # non-superstep cells cannot stack
+    per_step = [{**c, "engine": "per-step"} for c in cells]
+    assert plan_groups(per_step) == {}
+
+
+def test_stacked_sweep_matches_sequential_ledger_all_modes(tmp_path, monkeypatch):
+    """Acceptance: stacked and sequential runs of the same grid produce
+    identical ledger records cell-for-cell (eval losses bitwise), across
+    all four sync modes — and the stacked run actually took the batched
+    path."""
+    sw = SweepSpec(
+        name="stack4",
+        archs=("tiny-t0",),
+        modes=("dp", "diloco", "int8", "streaming"),
+        replicas=(2,),
+        sync_every=(2,),
+        batch_tokens=(512,),
+        seq_len=64,
+        steps=4,
+        lr=3e-3,
+        seeds=(0, 1),
+        warmup_frac=0.25,
+        eval_batches=1,
+        eval_seqs=4,
+    )
+    cells = expand_grid(sw)
+    assert len(cells) == 8  # 4 modes x 2 seeds (dp collapses M/H)
+    groups = {id(g): g for g in plan_groups(cells).values()}.values()
+    assert sorted(len(g) for g in groups) == [2, 2, 2, 2]
+
+    from repro.launch import sweep as sweep_mod
+
+    batched = []
+    real = sweep_mod.run_cell_batch
+    monkeypatch.setattr(
+        sweep_mod, "run_cell_batch",
+        lambda *a, **kw: (batched.append(len(a[1])), real(*a, **kw))[1])
+
+    led_stacked = str(tmp_path / "stacked.jsonl")
+    led_seq = str(tmp_path / "seq.jsonl")
+    out_stacked = run_sweep(sw, led_stacked, quiet=True, stack=True)
+    out_seq = run_sweep(sw, led_seq, quiet=True, stack=False)
+    assert batched == [2, 2, 2, 2]
+    assert not any(r["skipped"] for r in out_stacked + out_seq)
+
+    a, b = read_ledger(led_stacked), read_ledger(led_seq)
+    assert set(a) == set(b) == {cell_id(c) for c in cells}
+    for cid in a:
+        for key in a[cid]:
+            if key == "runtime_s":
+                continue
+            assert a[cid][key] == b[cid][key], (cid, key)
+
+
+def test_run_cell_batch_records_match_run_experiment():
+    """Single-group equivalence at the API level (no ledger): records are
+    field-for-field identical to run_experiment up to runtime_s."""
+    sw = get_sweep("smoke-stack")
+    specs = expand_grid(sw)[:2]
+    recs = run_cell_batch(sw, specs)
+    for spec, rec in zip(specs, recs):
+        seq = run_experiment(cell_config(sw, spec, "")).to_record()
+        for key in seq:
+            if key == "runtime_s":
+                continue
+            assert seq[key] == rec[key], (key, seq[key], rec[key])
 
 
 # ---------------------------------------------------------------------------
