@@ -49,12 +49,15 @@ from repro.core.superstep import SuperstepEngine
 from repro.data import SyntheticLM
 from repro.models import build_model
 
-# the acceptance grid: DP vs DiLoCo vs int8 vs streaming, M=4, H=20
+# the acceptance grid: DP vs DiLoCo vs int8 vs int4 vs streaming, M=4, H=20
+# (int4 goes through the sync-strategy registry — the path a user-registered
+# strategy takes — so `make bench-smoke` exercises it on every CI run)
 MODES = {
     "dp": dict(num_replicas=1, data_parallel=True),
     "diloco": dict(num_replicas=4),
-    "diloco_int8": dict(num_replicas=4, compression="int8"),
-    "streaming": dict(num_replicas=4, streaming_fragments=4),
+    "diloco_int8": dict(num_replicas=4, sync="int8"),
+    "diloco_int4": dict(num_replicas=4, sync="int4"),
+    "streaming": dict(num_replicas=4, sync="streaming:fragments=4"),
 }
 
 
@@ -85,22 +88,22 @@ def _best_of(run_window, state, base, steps, windows):
 def time_loop(trainer, data, steps, seqs, windows, *, donate):
     """Per-step loops: ``donate=False`` is the seed baseline (state copied
     every call, eager streaming sync); ``donate=True`` is --engine per-step."""
-    dcfg = trainer.dcfg
-    H, P = dcfg.sync_every, dcfg.streaming_fragments
+    strat = trainer.sync
+    H, P = trainer.dcfg.sync_every, strat.num_fragments
     if donate:
         inner, outer = trainer.jit_inner_step(), trainer.jit_outer_sync()
     else:
         inner, outer = jax.jit(trainer.inner_step), jax.jit(trainer.outer_sync)
     frag = (streaming.FragmentSync(trainer, donate=donate)
-            if P > 0 and not dcfg.data_parallel else None)
+            if P > 0 and strat.uses_outer_opt else None)
 
     def window(state, base, n):
         for t in range(base, base + n):
             batch = data.global_batch(t, trainer.M, seqs)
             state, metrics = inner(state, batch)
-            if not dcfg.data_parallel:
+            if strat.uses_outer_opt:
                 if frag is not None:
-                    for p in streaming.fragments_due(t + 1, P, H):
+                    for p in strat.fragments_due(t + 1, H):
                         # seed behavior: eager per-leaf sync, Python flatten
                         # per call; engine behavior: cached jitted executable
                         state = frag.jitted(p)(state) if donate else frag.apply(state, p)

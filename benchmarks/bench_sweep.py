@@ -156,6 +156,7 @@ def bench_grid(name: str, workdir: str, *, check: bool) -> dict:
     out = {
         "grid": name,
         "n_cells": len(cells),
+        "modes": sorted({s["mode"] for s in cells}),  # sync strategies covered
         "distinct_shapes": distinct_shapes,
         "expected_round_builds": expected_rounds,
         "stack_groups": [len(g) for g in groups],

@@ -36,7 +36,9 @@ FITS = os.path.join("results", "FITS_smoke.json")
 
 
 def main() -> int:
-    sweep = get_sweep("smoke")
+    # int4 rides along so the registry-only strategy path (a new strategy
+    # added with zero engine edits) is exercised by every CI run
+    sweep = get_sweep("smoke").replace(modes=("dp", "diloco", "int4"))
     for p in (LEDGER, FITS):
         if os.path.exists(p):
             os.remove(p)

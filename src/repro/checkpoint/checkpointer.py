@@ -8,8 +8,11 @@ are reaped on the next ``Checkpointer(...)`` construction.
 
 Manifest schema v2 records everything needed to restore without a live
 template: schema version, step, per-leaf dtypes/shapes, ``num_replicas``,
-the sync mode (``none``/``int8``/``streaming``/``dp``) and a config
-fingerprint.  v1 directories (``{"step", "keys"}`` only) still load.
+the sync mode — the trainer's ``SyncStrategy`` manifest tag (``none`` /
+``int8`` / ``streaming`` / ``dp`` / ``int4`` / any registered strategy's;
+``repro.core.sync.from_tag`` maps a tag back to its strategy class, with
+``"none"`` permanently aliased to the full-precision strategy) — and a
+config fingerprint.  v1 directories (``{"step", "keys"}`` only) still load.
 
 Restore paths:
 
@@ -104,13 +107,15 @@ def config_fingerprint(trainer) -> str:
     and data stream, so changing them breaks exact resume).
 
     ``num_replicas`` is deliberately excluded: elastic M -> M' restore is a
-    supported operation, not a config mismatch.
+    supported operation, not a config mismatch.  The algorithm section is
+    canonicalized by the sync strategy (``SyncStrategy.fingerprint_fields``):
+    a config spelled through the legacy flags and one spelled through
+    ``sync="..."`` digest identically, and both match pre-strategy
+    checkpoints, so the migration never trips the drift warning.
     """
-    dcfg = dataclasses.asdict(trainer.dcfg)
-    dcfg.pop("num_replicas", None)
     payload = {
         "model": dataclasses.asdict(trainer.model.cfg),
-        "diloco": dcfg,
+        "diloco": trainer.sync.fingerprint_fields(trainer.dcfg),
         "optimizer": dataclasses.asdict(trainer.ocfg),
         "train": {
             k: getattr(trainer.tcfg, k)
@@ -326,7 +331,7 @@ class Checkpointer:
             saved_m = int(flat["inner_opt/count"].shape[0])
         target_m = int(num_replicas) if num_replicas is not None else trainer.M
         if target_m != saved_m:
-            if trainer.dcfg.data_parallel:
+            if not trainer.sync.uses_outer_opt:
                 raise ValueError(
                     f"cannot elastically restore a data-parallel run "
                     f"(saved M={saved_m}, requested M'={target_m})"

@@ -180,12 +180,26 @@ class DiLoCoConfig:
     outer_momentum: float = 0.9      # Nesterov momentum
     nesterov: bool = True
     data_parallel: bool = False      # True = pure Data-Parallel (no outer opt)
-    # --- beyond-paper features -----------------------------------------
+    # --- outer-sync strategy -------------------------------------------
+    # Registered strategy spec "name[:key=value,...]" (repro.core.sync):
+    # "dp" | "full" | "int8" | "int4" | "streaming:fragments=P" | any
+    # user-registered strategy.  Empty = resolve from the legacy flags
+    # below (data_parallel / compression / streaming_fragments — the
+    # deprecation shim keeps old configs, ledgers, and checkpoints valid).
+    sync: str = ""
+    # --- legacy flags (deprecated spellings of the above) ---------------
     compression: str = "none"        # none | int8  (outer-Δ all-reduce compression)
     streaming_fragments: int = 0     # >0 -> Streaming DiLoCo with P fragments
     error_feedback: bool = True      # residual accumulation for compressed sync
 
     def __post_init__(self):
+        if self.sync and (self.data_parallel or self.compression != "none"
+                          or self.streaming_fragments > 0):
+            raise ValueError(
+                f"sync={self.sync!r} is exclusive with the legacy "
+                "data_parallel/compression/streaming_fragments flags; the "
+                "strategy spec already says how replicas synchronize"
+            )
         if self.streaming_fragments < 0:
             raise ValueError(f"streaming_fragments must be >= 0, got {self.streaming_fragments}")
         if self.streaming_fragments > 0 and self.compression != "none":

@@ -7,11 +7,14 @@ expands a spec into concrete cells, runs each on the superstep engine, and
 records them in a JSONL ledger that ``repro.launch.fit`` turns into the
 paper's fitted scaling laws.
 
-Modes (the Streaming-DiLoCo axis rides along as a first-class grid value):
+Modes are registered sync-strategy names (``repro.core.sync``; any strategy
+a user registers is a valid grid mode as-is), plus the historical
+``diloco`` spelling of the full-precision strategy:
 
 * ``dp``        — Data-Parallel baseline (M forced to 1, no outer step)
-* ``diloco``    — paper Algorithm 1, full-precision outer sync
+* ``diloco``    — paper Algorithm 1, full-precision outer sync (``full``)
 * ``int8``      — int8-compressed outer deltas with error feedback
+* ``int4``      — int4 block-quantized outer deltas with error feedback
 * ``streaming`` — Streaming-DiLoCo fragment sync (P fragments per round)
 """
 from __future__ import annotations
@@ -85,13 +88,15 @@ SWEEPS = {
         eval_seqs=8,
         checkpoint_every=4,
     ),
-    # Stackable smoke: one (arch, M, H, B) shape swept over lr x seed — the
-    # 6 cells form a single cell-batched group, so this grid exercises (and
-    # benchmarks) the vmap-stacked sweep path end to end.
+    # Stackable smoke: one (arch, M, H, B) shape swept over lr x seed per
+    # mode — each mode's 6 cells form one cell-batched group, so this grid
+    # exercises (and benchmarks) the vmap-stacked sweep path end to end.
+    # The int4 mode keeps the registry-only strategy path on every CI run
+    # (make bench-sweep-smoke -> results/BENCH_sweep_smoke.json).
     "smoke-stack": SweepSpec(
         name="smoke-stack",
         archs=("tiny-t0",),
-        modes=("diloco",),
+        modes=("diloco", "int4"),
         replicas=(2,),
         sync_every=(4,),
         batch_tokens=(1024,),
@@ -104,11 +109,11 @@ SWEEPS = {
         eval_seqs=8,
     ),
     # CPU-feasible ladder: the benchmark grid as a ledger-producing sweep
-    # (tiny family, all four sync modes, the paper's M / H / B axes reduced).
+    # (tiny family, all five sync modes, the paper's M / H / B axes reduced).
     "ladder": SweepSpec(
         name="ladder",
         archs=("tiny-t0", "tiny-t1", "tiny-t2"),
-        modes=("dp", "diloco", "int8", "streaming"),
+        modes=("dp", "diloco", "int8", "int4", "streaming"),
         replicas=(1, 2, 4),
         sync_every=(5, 15),
         batch_tokens=(2048, 8192),

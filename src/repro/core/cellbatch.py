@@ -27,8 +27,8 @@ Per-cell results are bitwise-identical to the sequential ``SuperstepEngine``
 on this backend (vmap adds a batch dimension to every op; it does not
 change per-cell reduction order) —
 ``tests/test_engine.py::test_cellbatch_matches_superstep_per_cell`` pins
-this for all four sync modes, and ``tests/test_sweep.py`` pins ledger
-equality end to end.
+this for every registered sync strategy (dp/full/int8/int4/streaming), and
+``tests/test_sweep.py`` pins ledger equality end to end.
 
 Donation caveat: as with the superstep engine, the stacked state passed to
 ``run_round``/``run`` is CONSUMED.  Rebind ``states = engine.run(...)``.
@@ -162,8 +162,7 @@ class CellBatchEngine:
         CONSUMES ``states``."""
         length = self.chunk if length is None else length
         end = start + length
-        dcfg = self.trainer.dcfg
-        if not dcfg.data_parallel and dcfg.streaming_fragments == 0:
+        if self.trainer.sync.pins_round_boundary:
             boundary = (start // self.chunk + 1) * self.chunk
             if end > boundary:
                 raise ValueError(
@@ -171,7 +170,7 @@ class CellBatchEngine:
                     f"at step {boundary}; split windows at multiples of "
                     f"sync_every={self.chunk} (engine.run does this)"
                 )
-        do_sync = (end % self.chunk == 0) and not dcfg.data_parallel
+        do_sync = (end % self.chunk == 0) and self.trainer.sync.pins_round_boundary
         states, metrics = self._round_fn(length, do_sync)(
             states, None, self._droot, self._dlogits, None)
         return states, jax.device_get(metrics)

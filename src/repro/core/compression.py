@@ -28,18 +28,26 @@ def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 
 
-def compress_tree(delta, ef=None):
+def _int8_roundtrip(v):
+    q, s = int8_quantize(v)
+    return int8_dequantize(q, s)
+
+
+def compress_tree(delta, ef=None, *, quantize=None):
     """Quantize+dequantize every leaf, tracking error feedback.
 
     Returns (transmitted_delta, new_error_feedback).  The transmitted value
-    is what the all-reduce actually carries (int8 payload semantics); the
-    residual is re-injected next round so the bias does not accumulate.
+    is what the all-reduce actually carries (quantized payload semantics);
+    the residual is re-injected next round so the bias does not accumulate.
+    ``quantize`` (fp32 leaf -> dequantized fp32 leaf) defaults to the
+    per-tensor int8 path; sync strategies (``repro.core.sync``) pass their
+    own codec (e.g. int4 block quantization) through the same EF machinery.
     """
+    qfn = _int8_roundtrip if quantize is None else quantize
 
     def one(d, e):
         v = d.astype(jnp.float32) + (e if e is not None else 0.0)
-        q, s = int8_quantize(v)
-        deq = int8_dequantize(q, s)
+        deq = qfn(v)
         return deq.astype(d.dtype), (v - deq)
 
     flat_d, treedef = jax.tree.flatten(delta)

@@ -11,6 +11,13 @@ re-broadcast.
 Data-Parallel is the ``data_parallel=True`` special case (no outer step);
 DiLoCo with M=1 is the paper's Lookahead-style variant (outer step kept).
 
+WHAT the outer sync does — full-precision averaging, int8/int4 quantization
+with error feedback, fragment-wise streaming, or any registered variant —
+is owned by the trainer's pluggable ``SyncStrategy`` (``repro.core.sync``,
+selected via ``DiLoCoConfig.sync`` or the legacy flag triple): the strategy
+contributes the extra state leaves, the in-graph ``outer_sync`` transform,
+the engines' scheduling capabilities, and its part of ``static_signature``.
+
 Two execution paths share the same functions:
   * ``inner_step`` / ``outer_sync``: separate executables for the real
     training loop (H handled in Python — no per-step cond overhead);
@@ -37,7 +44,6 @@ operand stays a true divide.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -45,7 +51,8 @@ import jax.numpy as jnp
 
 from repro import sharding
 from repro.configs.base import DiLoCoConfig, OptimizerConfig, TrainConfig
-from repro.core import compression, jitcache, outer_opt
+from repro.core import jitcache, outer_opt
+from repro.core import sync as sync_lib
 from repro.models.build import Model
 from repro.optim import adamw_init, adamw_update, clip_by_global_norm
 from repro.optim.adamw import abstract_adamw_state
@@ -63,8 +70,8 @@ def static_signature(trainer: "DiLoCo") -> tuple:
     o, d, t = trainer.ocfg, trainer.dcfg, trainer.tcfg
     return (
         trainer.model.cfg,
-        (d.num_replicas, d.sync_every, d.data_parallel, d.compression,
-         d.streaming_fragments, d.error_feedback, d.nesterov),
+        (d.num_replicas, d.sync_every, d.nesterov,
+         trainer.sync.static_signature()),
         (o.b1, o.b2, o.eps, o.clip_norm, o.final_lr_ratio),
         (t.global_batch_tokens, t.seq_len, t.steps, t.microbatches),
         jitcache.context_key(),
@@ -81,6 +88,18 @@ class DiLoCo:
     _jit_cache: dict = dataclasses.field(
         default_factory=dict, init=False, repr=False, compare=False
     )
+    # resolved-once sync strategy (pure function of dcfg)
+    _sync: Optional[sync_lib.SyncStrategy] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False
+    )
+
+    @property
+    def sync(self) -> sync_lib.SyncStrategy:
+        """The trainer's outer-sync strategy (``repro.core.sync``), resolved
+        from ``dcfg.sync`` or — deprecation shim — the legacy flag triple."""
+        if self._sync is None:
+            self._sync = sync_lib.resolve(self.dcfg)
+        return self._sync
 
     # ---- compiled entry points -------------------------------------------
     # State-carrying hot-path executables donate their state argument so the
@@ -121,16 +140,10 @@ class DiLoCo:
 
     @property
     def sync_mode(self) -> str:
-        """Outer-sync flavor, as recorded in checkpoint manifests:
-        ``dp`` (no outer step) / ``none`` (full-precision) / ``int8`` /
-        ``streaming``."""
-        if self.dcfg.data_parallel:
-            return "dp"
-        if self.dcfg.compression == "int8":
-            return "int8"
-        if self.dcfg.streaming_fragments > 0:
-            return "streaming"
-        return "none"
+        """Outer-sync flavor, as recorded in checkpoint manifests — the
+        strategy's manifest tag (``dp`` / ``none`` (full-precision) /
+        ``int8`` / ``streaming`` / ``int4`` / any registered strategy's)."""
+        return self.sync.tag
 
     # ---- traced hyperparameters ------------------------------------------
     def hparams(self) -> dict:
@@ -143,7 +156,7 @@ class DiLoCo:
             "warmup": jnp.int32(self.ocfg.warmup_steps),
             "weight_decay": jnp.float32(self.weight_decay),
         }
-        if not self.dcfg.data_parallel:
+        if self.sync.uses_outer_opt:
             hp["outer_lr"] = jnp.float32(self.dcfg.outer_lr)
             hp["outer_momentum"] = jnp.float32(self.dcfg.outer_momentum)
         return hp
@@ -165,11 +178,10 @@ class DiLoCo:
             "inner_opt": inner_opt,
             "hparams": self.hparams(),
         }
-        if not self.dcfg.data_parallel:
+        if self.sync.uses_outer_opt:
             state["global_params"] = gparams
             state["outer_m"] = outer_opt.outer_init(gparams)
-            if self.dcfg.compression != "none" and self.dcfg.error_feedback:
-                state["ef"] = compression.init_error_feedback(gparams, self.M)
+            state.update(self.sync.extra_state(self, gparams))
         return state
 
     def abstract_state(self, dtype=jnp.bfloat16) -> dict:
@@ -186,11 +198,10 @@ class DiLoCo:
             "inner_opt": lead(abstract_adamw_state(gparams)),
             "hparams": self.abstract_hparams(),
         }
-        if not self.dcfg.data_parallel:
+        if self.sync.uses_outer_opt:
             state["global_params"] = gparams
             state["outer_m"] = outer_opt.abstract_outer_state(gparams)
-            if self.dcfg.compression != "none" and self.dcfg.error_feedback:
-                state["ef"] = compression.abstract_error_feedback(gparams, self.M)
+            state.update(self.sync.abstract_extra_state(self, gparams))
         return state
 
     def state_partition_specs(self) -> dict:
@@ -224,11 +235,10 @@ class DiLoCo:
             },
             "hparams": {k: sharding.spec() for k in self.hparams()},
         }
-        if not self.dcfg.data_parallel:
+        if self.sync.uses_outer_opt:
             specs["global_params"] = pspec()
             specs["outer_m"] = pspec()
-            if self.dcfg.compression != "none" and self.dcfg.error_feedback:
-                specs["ef"] = pspec(extra_leading=rep)
+            specs.update(self.sync.extra_state_partition_specs(self, pspec))
         return specs
 
     def batch_partition_specs(self, batch) -> dict:
@@ -314,78 +324,20 @@ class DiLoCo:
 
     # ---- outer step -------------------------------------------------------------
     def outer_sync(self, state: dict, weights: Optional[jax.Array] = None) -> dict:
-        """Outer gradient all-reduce + Nesterov step + broadcast.
+        """Outer gradient all-reduce + outer step + broadcast, as defined by
+        the trainer's sync strategy (``repro.core.sync``) — full-precision,
+        quantized (int8/int4 with error feedback), or any registered
+        variant.
 
         ``weights``: optional (M,) participation weights (straggler dropout /
         partial participation).  Default: uniform 1/M.
         """
-        if self.dcfg.data_parallel:
-            return state
-        gparams = state["global_params"]
-        inner = state["inner_params"]
-
-        w = None
-        if weights is not None:
-            w = weights / jnp.maximum(weights.sum(), 1e-9)
-
-        new_ef = None
-        if self.dcfg.compression == "int8":
-            # per-replica Δ_m stacks are inherent here: each replica quantizes
-            # (and keeps error feedback for) its own transmission
-            delta_m = jax.tree.map(
-                lambda g, p: g[None].astype(jnp.float32) - p.astype(jnp.float32),
-                gparams, inner,
-            )
-            delta_m, new_ef = compression.compress_tree(delta_m, state.get("ef"))
-            if w is None:
-                delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), delta_m)
-            else:
-                delta = jax.tree.map(
-                    lambda d: jnp.tensordot(w, d.astype(jnp.float32), axes=1), delta_m
-                )
-        elif w is None:
-            # mean_m(θ_g - θ_m) = θ_g - mean_m(θ_m): the replica mean folds
-            # into one fp32-accumulated reduction — the (M, ...) fp32 delta
-            # stack is never materialized, so peak memory does not scale
-            # with M in fp32
-            delta = jax.tree.map(
-                lambda g, p: g.astype(jnp.float32)
-                - jnp.mean(p, axis=0, dtype=jnp.float32),
-                gparams, inner,
-            )
-        else:
-            # Σ_m w_m (θ_g - θ_m) = θ_g - Σ_m w_m θ_m for normalized w
-            delta = jax.tree.map(
-                lambda g, p: g.astype(jnp.float32)
-                - jnp.einsum("m,m...->...", w, p, preferred_element_type=jnp.float32),
-                gparams, inner,
-            )
-
-        hp = state["hparams"]
-        new_global, new_mom = outer_opt.outer_step(
-            gparams, delta, state["outer_m"],
-            lr=hp["outer_lr"], mu=hp["outer_momentum"],
-            nesterov=self.dcfg.nesterov,
-        )
-        # broadcast the fresh global model to all replicas
-        new_inner = jax.tree.map(
-            lambda g, p: jnp.broadcast_to(g[None].astype(p.dtype), p.shape), new_global, inner
-        )
-        new_inner = self._constrain(new_inner)
-        out = {
-            **state,
-            "inner_params": new_inner,
-            "global_params": new_global,
-            "outer_m": new_mom,
-        }
-        if new_ef is not None:
-            out["ef"] = new_ef
-        return out
+        return self.sync.apply(self, state, weights)
 
     # ---- fused step (dry-run / single-executable loops) ----------------------------
     def train_step(self, state: dict, batch: dict) -> Tuple[dict, dict]:
         state, metrics = self.inner_step(state, batch)
-        if self.dcfg.data_parallel:
+        if not self.sync.uses_outer_opt:
             return state, metrics
         sync_now = (state["step"] % self.dcfg.sync_every) == 0
         state = jax.lax.cond(sync_now, self.outer_sync, lambda s: s, state)
@@ -394,7 +346,7 @@ class DiLoCo:
     # ---- evaluation -------------------------------------------------------------------
     def eval_params(self, state: dict):
         """Paper §2.2: evaluate the most recent *global* model (DP: the model)."""
-        if self.dcfg.data_parallel:
+        if not self.sync.uses_outer_opt:
             return jax.tree.map(lambda p: p[0], state["inner_params"])
         return state["global_params"]
 
@@ -408,4 +360,6 @@ class DiLoCo:
 def make_trainer(model: Model, dcfg: DiLoCoConfig, ocfg: OptimizerConfig, tcfg: TrainConfig) -> DiLoCo:
     if dcfg.data_parallel:
         assert dcfg.num_replicas == 1, "Data-Parallel is the M=1, no-outer-opt case"
-    return DiLoCo(model, dcfg, ocfg, tcfg)
+    trainer = DiLoCo(model, dcfg, ocfg, tcfg)
+    trainer.sync  # resolve + validate the sync strategy (fail fast on bad specs)
+    return trainer

@@ -37,7 +37,7 @@ def resize_replicas(trainer, state: dict, new_m: int) -> dict:
     ``trainer.M``), so this also serves elastic *restore*: a trainer already
     configured for M' can resize a checkpointed M-replica state.
     """
-    assert not trainer.dcfg.data_parallel
+    assert trainer.sync.uses_outer_opt, "elastic resize needs a global model"
     gparams = state["global_params"]
     old_m = int(jax.tree.leaves(state["inner_params"])[0].shape[0])
 
@@ -59,7 +59,10 @@ def resize_replicas(trainer, state: dict, new_m: int) -> dict:
         "count": new_count,
     }
     out = {**state, "inner_params": new_inner, "inner_opt": new_opt}
-    if "ef" in state:
-        # fresh replicas have transmitted nothing: zero residual
-        out["ef"] = jax.tree.map(grow, state["ef"], zeros)
+    for key in trainer.sync.extra_state_keys:
+        # strategy-owned per-replica leaves (e.g. quantizer error feedback)
+        # resize like the inner state: fresh replicas have transmitted
+        # nothing, so their slices are zero
+        if key in state:
+            out[key] = jax.tree.map(grow, state[key], zeros)
     return out

@@ -65,11 +65,11 @@ class FragmentSync:
     """
 
     def __init__(self, trainer, *, donate: bool = True):
-        dcfg = trainer.dcfg
-        assert not dcfg.data_parallel
-        assert dcfg.streaming_fragments > 0
+        strat = trainer.sync
+        assert strat.uses_outer_opt
+        assert strat.num_fragments > 0
         self.trainer = trainer
-        self.num_fragments = dcfg.streaming_fragments
+        self.num_fragments = strat.num_fragments
         self.assignment = fragment_assignment(
             trainer.model.abstract_params(jnp.float32), self.num_fragments
         )
@@ -123,7 +123,7 @@ class FragmentSync:
 
 def _cached_sync(trainer) -> FragmentSync:
     sync = getattr(trainer, "_fragment_sync", None)
-    if sync is None or sync.num_fragments != trainer.dcfg.streaming_fragments:
+    if sync is None or sync.num_fragments != trainer.sync.num_fragments:
         # no donation in the convenience path: callers may hold other
         # references to the state they pass in
         sync = FragmentSync(trainer, donate=False)
@@ -140,6 +140,6 @@ def streaming_train_step(trainer, state: dict, batch: dict):
     """Python-scheduled streaming step (inner step + any due fragments)."""
     state, metrics = trainer.inner_step(state, batch)
     step = int(state["step"])
-    for frag in fragments_due(step, trainer.dcfg.streaming_fragments, trainer.dcfg.sync_every):
+    for frag in fragments_due(step, trainer.sync.num_fragments, trainer.dcfg.sync_every):
         state = outer_sync_fragment(trainer, state, frag)
     return state, metrics

@@ -15,11 +15,12 @@ an entire outer round:
   folded into the PRNG key *inside* the scan body (bitwise-identical
   batches to the host path, zero host->device traffic); file-backed
   sources get a double-buffered ``device_put`` prefetcher instead;
-* the outer sync in the same executable — full, int8-compressed (error
-  feedback carried in the donated state), or fragment-wise streaming
-  (``lax.cond`` on the static fragment schedule inside the scan body, so
-  mid-round fragment syncs land on exactly the step the per-step loop
-  would run them);
+* the outer sync in the same executable — whatever ``SyncStrategy`` the
+  trainer carries (``repro.core.sync``): full-precision, quantized
+  (int8/int4 error feedback rides in the donated state), or fragment-wise
+  streaming-style strategies (``lax.cond`` on the strategy's fragment
+  schedule inside the scan body, so mid-round fragment syncs land on
+  exactly the step the per-step loop would run them);
 * stacked ``(H, ...)`` metrics returned to the host — ONE host sync per
   outer round instead of one per step.
 
@@ -47,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import jitcache, streaming
+from repro.core import jitcache
 from repro.core.diloco import static_signature
 from repro.data import SyntheticLM
 from repro.data.pipeline import synthetic_tokens
@@ -100,19 +101,19 @@ def round_body(trainer, length: int, do_sync: bool, *, batch_seqs: int,
       operands for on-device generation; ``None`` otherwise;
     * ``weights`` — optional (M,) outer participation weights.
 
-    Depends on ``trainer`` only through its static signature (hyperparams
-    ride in ``state["hparams"]``), which is what makes the compiled form
-    shareable across same-shape trainers.
+    The outer sync is whatever the trainer's ``SyncStrategy`` defines:
+    fragment-wise strategies (``num_fragments > 0``) embed their mid-round
+    syncs behind ``lax.cond`` inside the scan body; round-pinned strategies
+    apply once at the end when ``do_sync``.  Depends on ``trainer`` only
+    through its static signature (hyperparams ride in ``state["hparams"]``),
+    which is what makes the compiled form shareable across same-shape
+    trainers.
     """
-    dcfg = trainer.dcfg
-    H = dcfg.sync_every
-    P = dcfg.streaming_fragments
+    strat = trainer.sync
+    H = trainer.dcfg.sync_every
+    P = strat.num_fragments
     M = trainer.M
-    frag = (
-        streaming.FragmentSync(trainer)
-        if (P > 0 and not dcfg.data_parallel)
-        else None
-    )
+    frag_apply = strat.fragment_applier(trainer) if P > 0 else None
 
     def round_fn(state, xs, droot, dlogits, weights):
         def body(st, x):
@@ -122,14 +123,14 @@ def round_body(trainer, length: int, do_sync: bool, *, batch_seqs: int,
             else:
                 batch = x
             st, metrics = trainer.inner_step(st, batch)
-            if frag is not None:
+            if frag_apply is not None:
                 # mid-round fragment syncs at their scheduled steps
                 # (st["step"] is post-increment, i.e. 1-based like the
                 # per-step loop's `step + 1`)
                 for p in range(P):
                     st = jax.lax.cond(
-                        streaming.is_due(st["step"], p, P, H),
-                        lambda s, p=p: frag.apply(s, p),
+                        strat.fragment_due(st["step"], p, H),
+                        lambda s, p=p: frag_apply(s, p),
                         lambda s: s,
                         st,
                     )
@@ -139,8 +140,8 @@ def round_body(trainer, length: int, do_sync: bool, *, batch_seqs: int,
             body, state, xs, length=length,
             unroll=min(unroll, length),
         )
-        if do_sync and frag is None and not dcfg.data_parallel:
-            state = trainer.outer_sync(state, weights)
+        if do_sync:
+            state = strat.apply(trainer, state, weights)
         return state, metrics
 
     return round_fn
@@ -238,9 +239,7 @@ class SuperstepEngine:
         share: bool = True,
     ):
         dcfg = trainer.dcfg
-        if dcfg.streaming_fragments > 0 and dcfg.compression != "none":
-            raise ValueError("streaming fragments do not support compression")
-        if chunk and not dcfg.data_parallel and chunk != dcfg.sync_every:
+        if chunk and trainer.sync.uses_outer_opt and chunk != dcfg.sync_every:
             raise ValueError(
                 f"chunk ({chunk}) must equal sync_every ({dcfg.sync_every}) "
                 "for DiLoCo; a free chunk length is only meaningful for DP"
@@ -300,8 +299,7 @@ class SuperstepEngine:
         """
         length = self.chunk if length is None else length
         end = start + length
-        dcfg = self.trainer.dcfg
-        if not dcfg.data_parallel and dcfg.streaming_fragments == 0:
+        if self.trainer.sync.pins_round_boundary:
             # a window crossing an interior H boundary would silently skip
             # that boundary's outer sync (the executable syncs only at its
             # end); run() splits windows so this can't happen
@@ -312,7 +310,7 @@ class SuperstepEngine:
                     f"at step {boundary}; split windows at multiples of "
                     f"sync_every={self.chunk} (engine.run does this)"
                 )
-        do_sync = (end % self.chunk == 0) and not dcfg.data_parallel
+        do_sync = (end % self.chunk == 0) and self.trainer.sync.pins_round_boundary
         xs = droot = dlogits = None
         if self._on_device_data:
             droot, dlogits = self.data._root, self.data._logits

@@ -46,6 +46,15 @@ def allreduce_time(n_params: float, r_nodes: int, net: Network, bits=BITS_PER_PA
     return 2.0 * n_params * bits / net.bandwidth * (1.0 - 1.0 / r_nodes) + net.latency
 
 
+def allreduce_bytes_time(payload_bytes: float, r_nodes: int, net: Network) -> float:
+    """``allreduce_time`` for an arbitrary per-participant payload — the
+    entry point for sync strategies whose outer payload is not
+    ``N * BITS_PER_PARAM`` (int8/int4 quantization, per-fragment slices)."""
+    if r_nodes <= 1:
+        return 0.0
+    return 2.0 * payload_bytes * 8.0 / net.bandwidth * (1.0 - 1.0 / r_nodes) + net.latency
+
+
 def compute_time(n_params: float, tokens: float, r_chips: int, q=CHIP_FLOPS) -> float:
     return 6.0 * n_params * tokens / (r_chips * q)
 
@@ -60,11 +69,25 @@ def train_time(
     sync_every: int = 30,
     cross_net: Network = MEDIUM,
     within_net: Network = HIGH,
+    outer_payload_bytes: float = None,
+    outer_syncs_per_round: int = 1,
 ) -> dict:
-    """End-to-end idealized wall-clock seconds (Appendix A.3)."""
+    """End-to-end idealized wall-clock seconds (Appendix A.3).
+
+    ``outer_payload_bytes`` / ``outer_syncs_per_round`` route the sync
+    strategy's comm accounting (``SyncStrategy.outer_payload_bytes`` /
+    ``.sync_events_per_round``) into the cross-datacenter term: int8 halves
+    the per-event payload, int4 quarters it, streaming sends 1/P of the
+    payload P times per round (same total bytes, Appendix A — but P latency
+    hits).  Defaults reproduce the paper's full-precision bf16 accounting.
+    The per-step gradient all-reduce (DP and the DiLoCo inner term) always
+    bills full-precision grads — outer-Δ compression does not touch it.
+    """
     steps = token_budget / batch_tokens
     r = num_chips(batch_tokens)
     comp = compute_time(n_params, token_budget, r)
+    if outer_payload_bytes is None:
+        outer_payload_bytes = n_params * BITS_PER_PARAM / 8.0
 
     if algorithm == "dp":
         comm = allreduce_time(n_params, r, cross_net) * steps
@@ -78,7 +101,10 @@ def train_time(
         # Appendix A: inner syncs stay within each group's datacenter; the
         # outer sync is an all-reduce across the M replica groups
         inner = allreduce_time(n_params, max(r // m_replicas, 1), within_net) * steps
-        outer = allreduce_time(n_params, m_replicas, cross_net) * steps / sync_every
+        outer = (
+            allreduce_bytes_time(outer_payload_bytes, m_replicas, cross_net)
+            * outer_syncs_per_round * steps / sync_every
+        )
         comm = inner + outer
     return {
         "steps": steps,

@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.configs import get_config, get_sweep
 from repro.configs.sweeps import SweepSpec, default_lr
+from repro.core import sync as sync_lib
 from repro.core.cellbatch import CellBatchEngine
 from repro.launch.train import (
     ExperimentConfig,
@@ -89,13 +90,27 @@ def _resolve_steps(sweep: SweepSpec, arch: str, batch_tokens: int) -> int:
     )
 
 
+# grid-mode name -> registered sync-strategy name.  Modes are strategy
+# names, except the historical "diloco" spelling of the full-precision
+# strategy; any newly registered strategy is a valid mode as-is.
+MODE_STRATEGY = {"diloco": "full"}
+
+
+def mode_strategy(mode: str) -> "sync_lib.SyncStrategy":
+    """Default-option strategy instance for a grid mode (capability
+    introspection: axis collapse, fragment clamp, sync spec)."""
+    return sync_lib.get(MODE_STRATEGY.get(mode, mode))
+
+
 def expand_grid(sweep: SweepSpec) -> list:
     """Cross product of the grid axes, normalized so equivalent cells get
-    identical specs: dp ignores the M / H / outer-optimizer axes (emitted
-    once per (arch, B, lr, seed) with M=1), streaming resolves its fragment
-    count.  Cheapest-first (by N then steps) so partial sweeps are useful."""
+    identical specs: strategies without an outer optimizer (dp) ignore the
+    M / H / outer-optimizer axes (emitted once per (arch, B, lr, seed) with
+    M=1), fragment-wise strategies resolve their fragment count.
+    Cheapest-first (by N then steps) so partial sweeps are useful."""
     cells = []
     seen = set()
+    strats = {mode: mode_strategy(mode) for mode in sweep.modes}
     for arch in sweep.archs:
         base_lr = sweep.lr or default_lr(get_config(arch).d_model)
         lrs = sweep.lrs or (base_lr,)
@@ -104,6 +119,8 @@ def expand_grid(sweep: SweepSpec) -> list:
         for batch_tokens in sweep.batch_tokens:
             steps = _resolve_steps(sweep, arch, batch_tokens)
             for mode in sweep.modes:
+                outer = strats[mode].uses_outer_opt
+                fragmented = strats[mode].num_fragments > 0
                 for m in sweep.replicas:
                     for h in sweep.sync_every:
                         for lr in lrs:
@@ -112,18 +129,18 @@ def expand_grid(sweep: SweepSpec) -> list:
                                     spec = {
                                         "arch": arch,
                                         "mode": mode,
-                                        "m": m if mode != "dp" else 1,
-                                        "h": h if mode != "dp" else 1,
+                                        "m": m if outer else 1,
+                                        "h": h if outer else 1,
                                         "batch_tokens": batch_tokens,
                                         "seq_len": sweep.seq_len,
                                         "steps": steps,
                                         "lr": round(lr, 8),
-                                        "outer_lr": outer_lr if mode != "dp" else 0.0,
-                                        "outer_momentum": sweep.outer_momentum if mode != "dp" else 0.0,
-                                        "nesterov": sweep.nesterov if mode != "dp" else False,
+                                        "outer_lr": outer_lr if outer else 0.0,
+                                        "outer_momentum": sweep.outer_momentum if outer else 0.0,
+                                        "nesterov": sweep.nesterov if outer else False,
                                         "streaming_fragments": (
                                             min(sweep.streaming_fragments, h)
-                                            if mode == "streaming" else 0
+                                            if fragmented else 0
                                         ),
                                         "seed": seed,
                                         "engine": sweep.engine,
@@ -154,9 +171,20 @@ def cell_id(spec: dict) -> str:
     ).hexdigest()[:12]
 
 
+def cell_sync_spec(spec: dict) -> str:
+    """The ``--sync`` strategy spec one grid cell runs under.  The fragment
+    axis is applied through ``SyncStrategy.with_num_fragments`` so
+    fragment-wise strategies keep working whatever their option is named."""
+    strat = mode_strategy(spec["mode"])
+    if spec["streaming_fragments"]:
+        strat = strat.with_num_fragments(spec["streaming_fragments"])
+    return strat.spec()
+
+
 def cell_config(sweep: SweepSpec, spec: dict, checkpoint_root: str) -> ExperimentConfig:
     """The ExperimentConfig that runs one grid cell, with its own
-    checkpoint directory for step-level resume."""
+    checkpoint directory for step-level resume.  The sync variant goes
+    through the strategy registry (``sync=...``), not the legacy flags."""
     ckpt_dir = os.path.join(checkpoint_root, cell_id(spec)) if checkpoint_root else ""
     return ExperimentConfig(
         arch=spec["arch"],
@@ -173,8 +201,7 @@ def cell_config(sweep: SweepSpec, spec: dict, checkpoint_root: str) -> Experimen
         seq_len=spec["seq_len"],
         steps=spec["steps"],
         seed=spec["seed"],
-        compression="int8" if spec["mode"] == "int8" else "none",
-        streaming_fragments=spec["streaming_fragments"],
+        sync=cell_sync_spec(spec),
         eval_batches=sweep.eval_batches,
         eval_seqs=sweep.eval_seqs,
         checkpoint_dir=ckpt_dir,
@@ -460,14 +487,20 @@ def build_argparser():
                     help="run every cell sequentially (disable cell batching)")
     ap.add_argument("--stack-max", type=int, default=8,
                     help="max cells stacked into one executable")
+    ap.add_argument("--list-syncs", action="store_true",
+                    help="list the registered sync strategies (valid grid "
+                         "modes) and exit")
     ap.add_argument("--no-xla-cache", dest="xla_cache", action="store_false",
                     help="disable the persistent compilation cache "
                          "(results/.xla_cache)")
     return ap
 
 
-def main():
-    args = build_argparser().parse_args()
+def main(argv=None):
+    args = build_argparser().parse_args(argv)
+    if args.list_syncs:
+        print(sync_lib.describe())
+        return
     if args.xla_cache:
         from repro.launch import xla_cache
 

@@ -2,8 +2,10 @@
 
 Runs Data-Parallel or DiLoCo training of any registered architecture on a
 (replica, data, model) mesh, with checkpoint/restart, periodic eval on the
-held-out stream, straggler simulation, and optional int8 outer compression /
-streaming fragment sync.
+held-out stream, straggler simulation, and any registered outer-sync
+strategy (``--sync int8``, ``--sync int4``, ``--sync streaming:fragments=4``,
+... — ``--list-syncs`` prints the registry; ``repro.core.sync`` is the
+extension point).
 
 Two execution engines (``--engine``):
 
@@ -33,7 +35,8 @@ import numpy as np
 from repro import sharding
 from repro.checkpoint import Checkpointer
 from repro.configs import DiLoCoConfig, OptimizerConfig, TrainConfig, get_config
-from repro.core import compute_util, elastic, streaming, wallclock
+from repro.core import compute_util, elastic, wallclock
+from repro.core import sync as sync_lib
 from repro.core.diloco import make_trainer
 from repro.core.superstep import SuperstepEngine
 from repro.data import SyntheticLM, TokenFileSource
@@ -66,7 +69,8 @@ class ExperimentConfig:
     overtrain: float = 1.0
     seed: int = 0
     mesh: str = "1,1,1"
-    compression: str = "none"        # none | int8
+    sync: str = ""                   # strategy spec "name[:k=v,...]"; see --list-syncs
+    compression: str = "none"        # none | int8 (legacy spelling of --sync)
     streaming_fragments: int = 0
     tokens_file: str = ""
     eval_every: int = 0
@@ -130,23 +134,45 @@ class ExperimentResult:
         }
 
 
+def config_strategy(config: ExperimentConfig) -> "sync_lib.SyncStrategy":
+    """The resolved sync strategy for one experiment config — ``sync`` spec
+    first, then the legacy algorithm/compression/streaming fields (no
+    deprecation warning here: this is the read-only accounting path)."""
+    if config.sync:
+        return sync_lib.parse_spec(config.sync)
+    if config.algorithm == "dp":
+        return sync_lib.get("dp")
+    if config.compression != "none":
+        return sync_lib.get(config.compression)
+    if config.streaming_fragments > 0:
+        return sync_lib.get("streaming", fragments=config.streaming_fragments)
+    return sync_lib.get("full")
+
+
 def simulate_cell(n_params: int, tokens: int, config: ExperimentConfig) -> dict:
     """Idealized wall-clock + compute-utilization for one cell.
 
     ``wallclock.train_time`` gives the Appendix-A end-to-end seconds; the
-    Table-6 CU model adds the utilization at the default cross-DC bandwidth
-    (int8 outer compression halves the outer payload).
+    Table-6 CU model adds the utilization at the default cross-DC bandwidth.
+    Outer-sync comm is billed through the cell's ``SyncStrategy``
+    (``outer_payload_bytes`` per event x ``sync_events_per_round``): int8
+    halves the outer payload, int4 quarters it, streaming splits it across
+    P per-round events.
     """
-    m = config.replicas if config.algorithm == "diloco" else 1
-    h = config.sync_every if config.algorithm == "diloco" else 1
+    strat = config_strategy(config)
+    algorithm = "diloco" if strat.uses_outer_opt else "dp"
+    m = config.replicas if algorithm == "diloco" else 1
+    h = config.sync_every if algorithm == "diloco" else 1
     wall = wallclock.train_time(
         n_params, tokens, config.batch_tokens,
-        algorithm=config.algorithm, m_replicas=m, sync_every=h,
+        algorithm=algorithm, m_replicas=m, sync_every=h,
+        outer_payload_bytes=strat.outer_payload_bytes(n_params),
+        outer_syncs_per_round=strat.sync_events_per_round,
     )
     r = wallclock.num_chips(config.batch_tokens)
     step_time = wallclock.compute_time(n_params, config.batch_tokens, r)
-    ratio = 2.0 if config.compression == "int8" else 1.0
-    if config.algorithm == "diloco" and m > 1:
+    ratio = strat.compression_ratio
+    if algorithm == "diloco" and m > 1:
         # outer sync: all-reduce across the M replica groups every H steps
         cu = compute_util.compute_utilization(
             n_params / ratio, step_time, wallclock.MEDIUM.bandwidth,
@@ -189,8 +215,17 @@ def build_argparser():
     ap.add_argument("--overtrain", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", default="1,1,1", help="replica,data,model")
-    ap.add_argument("--compression", choices=["none", "int8"], default="none")
-    ap.add_argument("--streaming-fragments", type=int, default=0)
+    ap.add_argument("--sync", default="",
+                    help="outer-sync strategy spec 'name[:key=value,...]' "
+                         "(e.g. int8, int4, streaming:fragments=4); "
+                         "see --list-syncs.  Overrides the legacy "
+                         "--compression/--streaming-fragments flags")
+    ap.add_argument("--list-syncs", action="store_true",
+                    help="list the registered sync strategies and exit")
+    ap.add_argument("--compression", choices=["none", "int8"], default="none",
+                    help="(deprecated: use --sync int8)")
+    ap.add_argument("--streaming-fragments", type=int, default=0,
+                    help="(deprecated: use --sync streaming:fragments=P)")
     ap.add_argument("--tokens-file", default="",
                     help="binary token file -> TokenFileSource (prefetched "
                          "host batches instead of on-device synthetic data)")
@@ -218,15 +253,25 @@ def make_run(args):
         global_batch_tokens=args.batch_tokens, seq_len=args.seq_len, steps=steps,
         seed=args.seed,
     )
+    sync_spec = getattr(args, "sync", "")
+    if sync_spec and args.algorithm == "dp" and \
+            sync_lib.parse_spec(sync_spec).uses_outer_opt:
+        raise ValueError(
+            f"--algorithm dp conflicts with --sync {sync_spec!r} (an "
+            "outer-optimizer strategy); drop --algorithm or use --sync dp"
+        )
     dcfg = DiLoCoConfig(
         num_replicas=args.replicas if args.algorithm == "diloco" else 1,
         sync_every=args.sync_every,
         outer_lr=args.outer_lr,
         outer_momentum=args.outer_momentum,
         nesterov=getattr(args, "nesterov", True),
-        data_parallel=args.algorithm == "dp",
+        # --sync wins over the legacy spellings; passing both non-default
+        # is rejected by DiLoCoConfig itself
+        data_parallel=args.algorithm == "dp" and not sync_spec,
         compression=args.compression,
         streaming_fragments=args.streaming_fragments,
+        sync=sync_spec,
     )
     ocfg = OptimizerConfig(peak_lr=args.lr, warmup_steps=args.warmup)
     trainer = make_trainer(model, dcfg, ocfg, tcfg)
@@ -273,9 +318,9 @@ def train_loop(args, trainer, data, steps, *, mesh=None, rules=None, quiet=False
     if state is None:
         state = trainer.init_state(jax.random.PRNGKey(args.seed))
 
-    if args.straggler_rate > 0 and trainer.dcfg.streaming_fragments > 0 and not quiet:
-        print("warning: --straggler-rate has no effect with streaming "
-              "fragments (fragment syncs always average all replicas)")
+    if args.straggler_rate > 0 and trainer.sync.num_fragments > 0 and not quiet:
+        print("warning: --straggler-rate has no effect with fragment-wise "
+              "sync strategies (fragment syncs always average all replicas)")
 
     if getattr(args, "engine", "superstep") == "superstep":
         loop = _superstep_loop
@@ -326,8 +371,8 @@ def _superstep_rounds(args, trainer, data, steps, state, start, ckpt, engine, *,
     while step < steps:
         end, nxt = engine.round_bounds(step, steps)
         weights = None
-        if (args.straggler_rate > 0 and m > 1 and not trainer.dcfg.data_parallel
-                and trainer.dcfg.streaming_fragments == 0 and end % H == 0):
+        if (args.straggler_rate > 0 and m > 1
+                and trainer.sync.pins_round_boundary and end % H == 0):
             weights = _straggler_weights(args, rng, m)
         state, mets = engine.run_round(state, step, end - step, weights=weights,
                                        next_length=nxt)
@@ -355,11 +400,9 @@ def _superstep_rounds(args, trainer, data, steps, state, start, ckpt, engine, *,
 def _per_step_loop(args, trainer, data, steps, state, start, ckpt, *,
                    seqs_per_replica, quiet):
     m = trainer.M
+    strat = trainer.sync
     inner = trainer.jit_inner_step()
     outer = trainer.jit_outer_sync()
-    frag = (streaming.FragmentSync(trainer)
-            if trainer.dcfg.streaming_fragments > 0 and not trainer.dcfg.data_parallel
-            else None)
     eval_step = trainer.jit_eval_step()
     rng = np.random.default_rng(args.seed + 99)
     history = []
@@ -367,12 +410,10 @@ def _per_step_loop(args, trainer, data, steps, state, start, ckpt, *,
     for step in range(start, steps):
         batch = data.global_batch(step, m, seqs_per_replica)
         state, metrics = inner(state, batch)
-        if not trainer.dcfg.data_parallel:
-            if frag is not None:
-                for p in streaming.fragments_due(
-                    step + 1, trainer.dcfg.streaming_fragments, trainer.dcfg.sync_every
-                ):
-                    state = frag.jitted(p)(state)
+        if strat.uses_outer_opt:
+            if strat.num_fragments > 0:
+                for p in strat.fragments_due(step + 1, trainer.dcfg.sync_every):
+                    state = strat.jitted_fragment(trainer, p)(state)
             elif (step + 1) % trainer.dcfg.sync_every == 0:
                 weights = None
                 if args.straggler_rate > 0 and m > 1:
@@ -439,8 +480,11 @@ def run_experiment(config: ExperimentConfig, *, quiet: bool = True) -> Experimen
     )
 
 
-def main():
-    args = build_argparser().parse_args()
+def main(argv=None):
+    args = build_argparser().parse_args(argv)
+    if args.list_syncs:
+        print(sync_lib.describe())
+        return
     if getattr(args, "xla_cache", True):
         from repro.launch import xla_cache
 

@@ -34,8 +34,9 @@ def _trainer(m=2, h=4, peak_lr=1e-3, data_seed=1234, **kw):
 
 def _per_step_reference(trainer, data, steps, seqs):
     """The classic inner_step/outer_sync loop (no donation: state stays
-    inspectable), including mid-round streaming fragment syncs."""
-    dcfg = trainer.dcfg
+    inspectable), including mid-round fragment syncs for fragment-wise
+    strategies."""
+    strat = trainer.sync
     state = trainer.init_state(jax.random.PRNGKey(0))
     inner = jax.jit(trainer.inner_step)
     outer = jax.jit(trainer.outer_sync)
@@ -43,13 +44,11 @@ def _per_step_reference(trainer, data, steps, seqs):
     for t in range(steps):
         state, met = inner(state, data.global_batch(t, trainer.M, seqs))
         losses.append(float(met["loss"]))
-        if not dcfg.data_parallel:
-            if dcfg.streaming_fragments:
-                for f in streaming.fragments_due(
-                    t + 1, dcfg.streaming_fragments, dcfg.sync_every
-                ):
+        if strat.uses_outer_opt:
+            if strat.num_fragments:
+                for f in strat.fragments_due(t + 1, trainer.dcfg.sync_every):
                     state = streaming.outer_sync_fragment(trainer, state, f)
-            elif (t + 1) % dcfg.sync_every == 0:
+            elif (t + 1) % trainer.dcfg.sync_every == 0:
                 state = outer(state)
     return state, losses
 
@@ -59,6 +58,20 @@ MODES = {
     "diloco": dict(m=2),
     "int8": dict(m=2, compression="int8"),
     "streaming": dict(m=2, streaming_fragments=2),
+    # the registry-only strategy (repro.core.sync_int4): proves a strategy
+    # added with zero engine edits rides every engine/resume path
+    "int4": dict(m=2, sync="int4"),
+}
+
+# legacy-flag spelling -> equivalent sync-strategy spec, for the pre/post
+# redesign equivalence matrix (old configs and strategy specs must resolve
+# to the same strategy and produce bitwise-identical trajectories)
+LEGACY_SPECS = {
+    "dp": (dict(m=1, data_parallel=True), dict(m=1, sync="dp")),
+    "diloco": (dict(m=2), dict(m=2, sync="full")),
+    "int8": (dict(m=2, compression="int8"), dict(m=2, sync="int8")),
+    "streaming": (dict(m=2, streaming_fragments=2),
+                  dict(m=2, sync="streaming:fragments=2")),
 }
 
 
@@ -131,6 +144,98 @@ def test_token_file_eval_is_held_out(tmp_path):
     # file is arange: token value == position; pools must not overlap
     assert int(np.max(train_b["tokens"])) < 30 * 4
     assert int(np.min(eval_b["tokens"])) >= 30 * 4
+
+
+# ---------------------------------------------------------------------------
+# legacy-flag configs vs sync-strategy specs: bitwise-identical trajectories
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", sorted(LEGACY_SPECS))
+def test_legacy_flags_and_sync_spec_trajectories_bitwise_equal(mode):
+    """Acceptance: every legacy sync mode produces bitwise-identical
+    training trajectories whether configured through the old flag triple
+    (data_parallel / compression / streaming_fragments) or the strategy
+    spec (``DiLoCoConfig(sync=...)``) — on the per-step loop, the compiled
+    superstep engine, and (via a mixed legacy+spec stack) the cell-batched
+    engine."""
+    legacy_kw, spec_kw = LEGACY_SPECS[mode]
+    steps, h, seqs = 6, 4, 2
+
+    def mk(kw):
+        kw = dict(kw)
+        return _trainer(m=kw.pop("m"), h=h, **kw)
+
+    tr_legacy, data = mk(legacy_kw)
+    tr_spec, _ = mk(spec_kw)
+    # same strategy identity -> same manifest tag, same executables
+    assert tr_legacy.sync_mode == tr_spec.sync_mode
+    assert type(tr_legacy.sync) is type(tr_spec.sync)
+    assert static_signature(tr_legacy) == static_signature(tr_spec)
+
+    # per-step loop
+    st_l, losses_l = _per_step_reference(tr_legacy, data, steps, seqs)
+    st_s, losses_s = _per_step_reference(tr_spec, data, steps, seqs)
+    assert losses_l == losses_s
+    for a, b in zip(jax.tree.leaves(st_l), jax.tree.leaves(st_s)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # superstep engine
+    out_l = tr_legacy.init_state(jax.random.PRNGKey(0))
+    out_l, mets_l = SuperstepEngine(tr_legacy, data, seqs).run(out_l, steps)
+    out_s = tr_spec.init_state(jax.random.PRNGKey(0))
+    out_s, mets_s = SuperstepEngine(tr_spec, data, seqs).run(out_s, steps)
+    np.testing.assert_array_equal(mets_l["loss"], mets_s["loss"])
+    for a, b in zip(jax.tree.leaves(out_l), jax.tree.leaves(out_s)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # cell-batched engine: a legacy-config cell and a spec-config cell
+    # stack into ONE executable (equal static signatures) and stay bitwise
+    # equal to each other and to the sequential superstep run
+    tr_l2, _ = mk(legacy_kw)
+    tr_s2, _ = mk(spec_kw)
+    d2 = SyntheticLM(vocab_size=data.vocab_size, seq_len=128, seed=1234)
+    engine = CellBatchEngine([tr_l2, tr_s2], [d2, d2], seqs)
+    states = engine.init_states([0, 0])
+    states, mets = engine.run(states, steps)
+    np.testing.assert_array_equal(mets["loss"][0], mets["loss"][1])
+    np.testing.assert_array_equal(mets["loss"][0], mets_l["loss"])
+    c0, c1 = engine.unstack(states)
+    for a, b in zip(jax.tree.leaves(c0), jax.tree.leaves(c1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_engines_agree_on_round_boundary_eligibility():
+    """Satellite regression: the window/H-boundary predicate once lived as
+    a copied flag expression in superstep.py AND cellbatch.py; both engines
+    must now consult the same strategy capability
+    (``SyncStrategy.pins_round_boundary``) for EVERY registered strategy —
+    a boundary-crossing window raises on both engines or on neither."""
+    from repro.core import sync as sync_lib
+
+    for name in sync_lib.names():
+        m = 1 if not sync_lib.get(name).uses_outer_opt else 2
+        tr_a, data = _trainer(m=m, h=4, sync=name)
+        tr_b, _ = _trainer(m=m, h=4, sync=name)
+        sup = SuperstepEngine(tr_a, data, 1)
+        cell = CellBatchEngine([tr_b], [data], 1)
+        pinned = tr_a.sync.pins_round_boundary
+        assert tr_b.sync.pins_round_boundary == pinned
+        verdicts = []
+        for engine, trainer in ((sup, tr_a), (cell, tr_b)):
+            state = trainer.init_state(jax.random.PRNGKey(0))
+            if engine is cell:
+                from repro.core.cellbatch import stack_trees
+
+                state = stack_trees([state])
+            try:
+                # crosses the interior H boundary at step 4
+                engine.run_round(state, start=2, length=4)
+                verdicts.append(False)
+            except ValueError as e:
+                assert "outer-sync boundary" in str(e)
+                verdicts.append(True)
+        assert verdicts == [pinned, pinned], (name, verdicts)
 
 
 # ---------------------------------------------------------------------------

@@ -110,6 +110,32 @@ def test_serve_splits_prng_keys_and_reports_both_phases():
     assert not np.array_equal(np.asarray(out["prompt_tokens"]), np.asarray(reused))
 
 
+def test_cli_list_syncs_prints_registry(capsys):
+    """--list-syncs on both CLIs prints every registered strategy and
+    returns without touching models or data."""
+    from repro.launch import sweep, train
+
+    train.main(["--list-syncs"])
+    out = capsys.readouterr().out
+    for name in ("dp", "full", "int8", "int4", "streaming"):
+        assert name in out
+    assert "payload B/param" in out
+    sweep.main(["--list-syncs"])
+    assert "int4" in capsys.readouterr().out
+
+
+def test_make_run_rejects_conflicting_algorithm_and_sync():
+    """--algorithm dp + an outer-opt --sync must error loudly, not silently
+    run a different algorithm than the ledger records."""
+    from repro.launch.train import ExperimentConfig, make_run
+
+    with pytest.raises(ValueError, match="conflicts"):
+        make_run(ExperimentConfig(arch="tiny-t0", algorithm="dp", sync="full"))
+    # --sync dp with algorithm dp is the coherent spelling and works
+    make_run(ExperimentConfig(arch="tiny-t0", algorithm="dp", sync="dp",
+                              batch_tokens=512, seq_len=64, steps=2))
+
+
 def test_collective_traffic_bf16_counting():
     from repro.launch.roofline import collective_traffic
 

@@ -66,8 +66,15 @@ def test_streaming_cells_clamp_fragments_to_h():
     cells = expand_grid(sweep)
     frags = {c["h"]: c["streaming_fragments"] for c in cells}
     assert frags == {2: 2, 4: 3}
-    cfg = cell_config(sweep, cells[0], "")
-    assert cfg.algorithm == "diloco" and cfg.streaming_fragments == cells[0]["streaming_fragments"]
+    # the cell runs through the strategy registry, fragments in the spec
+    from repro.core import sync
+
+    for cell in cells:
+        cfg = cell_config(sweep, cell, "")
+        assert cfg.algorithm == "diloco"
+        assert sync.parse_spec(cfg.sync) == sync.get(
+            "streaming", fragments=cell["streaming_fragments"])
+        assert cfg.streaming_fragments == 0  # legacy flag unused on this path
 
 
 def test_paper_grid_is_the_papers_axes():
@@ -119,16 +126,24 @@ def test_param_count_memoized_per_arch(monkeypatch):
 # ---------------------------------------------------------------------------
 
 
-def test_smoke_stack_grid_is_one_stackable_group():
+def test_smoke_stack_grid_is_one_stackable_group_per_mode():
+    """diloco and int4 each form one 6-cell (lr x seed) stacked group; the
+    int4 half keeps the registry-only strategy path in the CI smoke bench
+    (results/BENCH_sweep_smoke.json)."""
     cells = expand_grid(get_sweep("smoke-stack"))
-    assert len(cells) == 6
-    assert len({stack_key(c) for c in cells}) == 1
-    assert {(c["lr"], c["seed"]) for c in cells} == {
-        (lr, s) for lr in (3e-3, 2e-3, 1e-3) for s in (0, 1)}
+    assert len(cells) == 12
+    assert {c["mode"] for c in cells} == {"diloco", "int4"}
+    assert len({stack_key(c) for c in cells}) == 2  # one per mode
+    for mode in ("diloco", "int4"):
+        sub = [c for c in cells if c["mode"] == mode]
+        assert {(c["lr"], c["seed"]) for c in sub} == {
+            (lr, s) for lr in (3e-3, 2e-3, 1e-3) for s in (0, 1)}
     plan = plan_groups(cells)
     assert set(plan) == {cell_id(c) for c in cells}
-    (group,) = {id(g): g for g in plan.values()}.values()
-    assert len(group) == 6
+    groups = {id(g): g for g in plan.values()}.values()
+    assert sorted(len(g) for g in groups) == [6, 6]
+    for g in groups:  # modes never stack together
+        assert len({s["mode"] for s in g}) == 1
 
 
 def test_plan_groups_rules(tmp_path):
@@ -163,12 +178,12 @@ def test_plan_groups_rules(tmp_path):
 def test_stacked_sweep_matches_sequential_ledger_all_modes(tmp_path, monkeypatch):
     """Acceptance: stacked and sequential runs of the same grid produce
     identical ledger records cell-for-cell (eval losses bitwise), across
-    all four sync modes — and the stacked run actually took the batched
-    path."""
+    all five sync modes (including the registry-only int4 strategy) — and
+    the stacked run actually took the batched path."""
     sw = SweepSpec(
-        name="stack4",
+        name="stack5",
         archs=("tiny-t0",),
-        modes=("dp", "diloco", "int8", "streaming"),
+        modes=("dp", "diloco", "int8", "int4", "streaming"),
         replicas=(2,),
         sync_every=(2,),
         batch_tokens=(512,),
@@ -181,9 +196,9 @@ def test_stacked_sweep_matches_sequential_ledger_all_modes(tmp_path, monkeypatch
         eval_seqs=4,
     )
     cells = expand_grid(sw)
-    assert len(cells) == 8  # 4 modes x 2 seeds (dp collapses M/H)
+    assert len(cells) == 10  # 5 modes x 2 seeds (dp collapses M/H)
     groups = {id(g): g for g in plan_groups(cells).values()}.values()
-    assert sorted(len(g) for g in groups) == [2, 2, 2, 2]
+    assert sorted(len(g) for g in groups) == [2, 2, 2, 2, 2]
 
     from repro.launch import sweep as sweep_mod
 
@@ -197,7 +212,7 @@ def test_stacked_sweep_matches_sequential_ledger_all_modes(tmp_path, monkeypatch
     led_seq = str(tmp_path / "seq.jsonl")
     out_stacked = run_sweep(sw, led_stacked, quiet=True, stack=True)
     out_seq = run_sweep(sw, led_seq, quiet=True, stack=False)
-    assert batched == [2, 2, 2, 2]
+    assert batched == [2, 2, 2, 2, 2]
     assert not any(r["skipped"] for r in out_stacked + out_seq)
 
     a, b = read_ledger(led_stacked), read_ledger(led_seq)
@@ -350,6 +365,14 @@ def test_simulate_cell_diloco_beats_dp_on_wallclock():
         algorithm="diloco", replicas=4, sync_every=30, compression="int8", **kw))
     assert int8["cu_at_medium_bw"] >= dl["cu_at_medium_bw"]
     assert int8["outer_payload_ratio"] == 2.0
+    # outer comm is now actually billed at the compressed payload
+    assert int8["wallclock"]["comm_s"] < dl["wallclock"]["comm_s"]
+    # the registry-only int4 strategy routes through the same accounting
+    int4 = simulate_cell(n, tokens, ExperimentConfig(
+        algorithm="diloco", replicas=4, sync_every=30, sync="int4", **kw))
+    assert int4["outer_payload_ratio"] == 4.0
+    assert int4["cu_at_medium_bw"] >= int8["cu_at_medium_bw"]
+    assert int4["wallclock"]["comm_s"] < int8["wallclock"]["comm_s"]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,293 @@
+"""SyncStrategy registry + protocol tests: lookup errors, collisions,
+spec parsing, manifest-tag round-trips, static-signature identity, the
+legacy-flag deprecation shim (config equivalence), payload accounting, and
+end-to-end registration of a custom strategy through the public API."""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer, config_fingerprint
+from repro.configs import DiLoCoConfig, OptimizerConfig, TrainConfig, get_config
+from repro.core import sync
+from repro.core.diloco import make_trainer, static_signature
+from repro.core.sync_int4 import QMAX, int4_block_quantize
+from repro.core.superstep import SuperstepEngine
+from repro.data import SyntheticLM
+from repro.models import build_model
+
+BUILTINS = ("dp", "full", "int8", "int4", "streaming")
+
+
+def _trainer(m=2, h=4, **dkw):
+    cfg = get_config("tiny-t0")
+    model = build_model(cfg)
+    tcfg = TrainConfig(global_batch_tokens=2 * 128, seq_len=128, steps=20)
+    return make_trainer(
+        model, DiLoCoConfig(num_replicas=m, sync_every=h, **dkw),
+        OptimizerConfig(peak_lr=3e-3, warmup_steps=2), tcfg,
+    ), SyntheticLM(vocab_size=cfg.vocab_size, seq_len=128)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_builtins_registered():
+    assert set(BUILTINS) <= set(sync.names())
+
+
+def test_unknown_strategy_lists_known_names():
+    with pytest.raises(KeyError) as e:
+        sync.get("gossip")
+    msg = str(e.value)
+    for name in BUILTINS:
+        assert name in msg
+
+
+def test_registration_collision_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        @sync.register("int8")
+        class Impostor(sync.SyncStrategy):
+            pass
+    # the original registration is untouched
+    assert type(sync.get("int8")).__name__ == "Int8Sync"
+
+
+def test_parse_spec_options_and_errors():
+    s = sync.parse_spec("streaming:fragments=4")
+    assert s.fragments == 4
+    assert s.spec() == "streaming:fragments=4"
+    assert sync.parse_spec("int8:error_feedback=false").error_feedback is False
+    assert sync.parse_spec("full").spec() == "full"
+    with pytest.raises(ValueError, match="key=value"):
+        sync.parse_spec("streaming:fragments")
+    with pytest.raises(ValueError, match="valid options"):
+        sync.parse_spec("full:bogus=1")
+    with pytest.raises(KeyError, match="unknown sync strategy"):
+        sync.parse_spec("nope:x=1")
+
+
+# ---------------------------------------------------------------------------
+# manifest tags
+# ---------------------------------------------------------------------------
+
+
+def test_manifest_tag_roundtrip_for_every_registered_strategy(tmp_path):
+    """Every registered strategy's checkpoint manifest tag maps back to the
+    same strategy class (``"none"`` stays aliased to full-precision)."""
+    for name in sync.names():
+        strat = sync.get(name)
+        m = 2 if strat.uses_outer_opt else 1
+        trainer, _ = _trainer(m=m, sync=name)
+        ckpt_dir = tmp_path / name
+        Checkpointer(str(ckpt_dir), trainer=trainer).save(
+            trainer.init_state(jax.random.PRNGKey(0)), 1)
+        with open(ckpt_dir / "step_0000000001" / "manifest.json") as f:
+            man = json.load(f)
+        assert man["sync_mode"] == strat.tag
+        assert sync.from_tag(man["sync_mode"]) is type(strat), name
+    # legacy alias: pre-strategy manifests record "none" for full precision
+    assert sync.from_tag("none").__name__ == "FullSync"
+    with pytest.raises(KeyError, match="known tags"):
+        sync.from_tag("martian")
+
+
+# ---------------------------------------------------------------------------
+# static signature
+# ---------------------------------------------------------------------------
+
+
+def test_static_signature_differs_across_strategies_not_hparams():
+    sigs = {}
+    for name in ("full", "int8", "int4", "streaming"):
+        trainer, _ = _trainer(m=2, sync=name)
+        sigs[name] = static_signature(trainer)
+    assert len(set(sigs.values())) == len(sigs)  # every strategy distinct
+    # hparam-only changes (lr / outer-lr / momentum) do NOT change it
+    cfg = get_config("tiny-t0")
+    model = build_model(cfg)
+    tcfg = TrainConfig(global_batch_tokens=2 * 128, seq_len=128, steps=20)
+    a = make_trainer(model, DiLoCoConfig(num_replicas=2, sync_every=4, sync="int4"),
+                     OptimizerConfig(peak_lr=3e-3, warmup_steps=2), tcfg)
+    b = make_trainer(model, DiLoCoConfig(num_replicas=2, sync_every=4, sync="int4",
+                                         outer_lr=0.123, outer_momentum=0.5),
+                     OptimizerConfig(peak_lr=9e-4, warmup_steps=2), tcfg)
+    assert static_signature(a) == static_signature(b)
+    # strategy OPTIONS are structural: they must change the signature
+    c = make_trainer(model, DiLoCoConfig(num_replicas=2, sync_every=4,
+                                         sync="int4:error_feedback=false"),
+                     OptimizerConfig(peak_lr=3e-3, warmup_steps=2), tcfg)
+    assert static_signature(a) != static_signature(c)
+
+
+# ---------------------------------------------------------------------------
+# legacy-flag deprecation shim (config equivalence)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("legacy_kw,spec", [
+    (dict(compression="int8"), "int8"),
+    (dict(streaming_fragments=2), "streaming:fragments=2"),
+])
+def test_legacy_flags_resolve_to_same_strategy_with_deprecation(legacy_kw, spec):
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        legacy = sync.resolve(DiLoCoConfig(num_replicas=2, sync_every=4, **legacy_kw))
+    new = sync.resolve(DiLoCoConfig(num_replicas=2, sync_every=4, sync=spec))
+    assert legacy == new  # same class, same options (dataclass equality)
+    assert legacy.static_signature() == new.static_signature()
+
+
+def test_legacy_and_spec_configs_share_config_fingerprint():
+    """Existing checkpoints must keep restoring without a drift warning:
+    the fingerprint canonicalizes both spellings to the same digest."""
+    for legacy_kw, spec_kw in [
+        (dict(data_parallel=True), dict(sync="dp")),
+        (dict(), dict(sync="full")),
+        (dict(compression="int8"), dict(sync="int8")),
+        (dict(streaming_fragments=2), dict(sync="streaming:fragments=2")),
+    ]:
+        m = 1 if legacy_kw.get("data_parallel") else 2
+        tr_legacy, _ = _trainer(m=m, **legacy_kw)
+        tr_spec, _ = _trainer(m=m, **spec_kw)
+        assert config_fingerprint(tr_legacy) == config_fingerprint(tr_spec), spec_kw
+
+
+def test_dp_and_full_resolve_without_deprecation_warning(recwarn):
+    sync.resolve(DiLoCoConfig())
+    sync.resolve(DiLoCoConfig(num_replicas=1, data_parallel=True))
+    assert not [w for w in recwarn if w.category is DeprecationWarning]
+
+
+def test_sync_spec_is_exclusive_with_legacy_flags():
+    with pytest.raises(ValueError, match="exclusive"):
+        DiLoCoConfig(sync="int8", compression="int8")
+    with pytest.raises(ValueError, match="exclusive"):
+        DiLoCoConfig(sync="full", data_parallel=True)
+    with pytest.raises(ValueError, match="exclusive"):
+        DiLoCoConfig(sync="streaming:fragments=2", streaming_fragments=2)
+
+
+def test_strategy_validation_fails_fast():
+    # spec-based streaming inherits the P <= H rule
+    with pytest.raises(ValueError, match="sync_every"):
+        _trainer(m=2, h=4, sync="streaming:fragments=8")
+    # dp through the spec path keeps the M == 1 contract
+    with pytest.raises(ValueError, match="M=1"):
+        _trainer(m=2, sync="dp")
+
+
+# ---------------------------------------------------------------------------
+# payload accounting
+# ---------------------------------------------------------------------------
+
+
+def test_outer_payload_bytes_and_compression_ratios():
+    n = 1e9
+    assert sync.get("dp").outer_payload_bytes(n) == 0.0
+    assert sync.get("full").outer_payload_bytes(n) == 2.0 * n     # bf16
+    assert sync.get("int8").outer_payload_bytes(n) == 1.0 * n     # 1 B/param
+    assert sync.get("int4").outer_payload_bytes(n) == 0.5 * n     # 4 bit/param
+    st = sync.get("streaming", fragments=4)
+    assert st.outer_payload_bytes(n) == 2.0 * n / 4               # per event
+    assert st.sync_events_per_round == 4                          # P events
+    # full-round ratios vs bf16: streaming moves the same total bytes
+    ratios = {name: sync.get(name).compression_ratio for name in BUILTINS}
+    assert ratios["full"] == ratios["dp"] == ratios["streaming"] == 1.0
+    assert ratios["int8"] == 2.0 and ratios["int4"] == 4.0
+
+
+# ---------------------------------------------------------------------------
+# int4 quantizer
+# ---------------------------------------------------------------------------
+
+
+def test_int4_block_quantize_levels_and_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (300, 200)) * 0.3
+    deq = int4_block_quantize(x)
+    # block scale = amax/QMAX; every dequantized value is a multiple of a
+    # block scale and the roundoff is bounded by scale/2 <= amax/(2*QMAX)
+    amax = float(jnp.abs(x).max())
+    assert float(jnp.abs(deq).max()) <= amax + 1e-6
+    assert float(jnp.abs(deq - x).max()) <= amax / (2 * QMAX) + 1e-6
+    # far coarser than int8 — it really is 4-bit (few distinct levels/block)
+    assert len(np.unique(np.asarray(deq))) <= (2 * QMAX + 1) * (300 * 200 // (256 * 128) + 1)
+    # exact zero stays exact (EF residuals start at zero)
+    assert float(jnp.abs(int4_block_quantize(jnp.zeros((64, 64)))).max()) == 0.0
+
+
+def test_int4_error_feedback_telescopes():
+    """With EF, the quantization bias must not accumulate: the sum of
+    transmitted deltas + final residual telescopes to the sum of the true
+    deltas (same invariant the int8 path holds)."""
+    from repro.core import compression
+
+    key = jax.random.PRNGKey(1)
+    true = [jax.random.normal(jax.random.fold_in(key, i), (257, 130)) * 0.1
+            for i in range(4)]
+    sent_total, ef = 0.0, None
+    for d in true:
+        (sent,), ef = compression.compress_tree(
+            (d,), ef, quantize=int4_block_quantize)
+        sent_total = sent_total + sent
+    resid = jax.tree.leaves(ef)[0]
+    np.testing.assert_allclose(
+        np.asarray(sent_total + resid), np.asarray(sum(true)),
+        rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# custom strategy through the public API (the README worked example)
+# ---------------------------------------------------------------------------
+
+
+def test_custom_strategy_registers_and_trains_end_to_end(tmp_path):
+    """A user-defined strategy — registered with zero edits anywhere —
+    trains on the compiled superstep engine, stamps its tag into the
+    checkpoint manifest, and resolves back from it."""
+    import dataclasses as dc
+
+    @sync.register("sign")
+    @dc.dataclass(frozen=True)
+    class SignSync(sync.SyncStrategy):
+        """signSGD-style outer sync: transmit sign(Δ) * mean|Δ| (1 bit/param
+        + one fp32 scale per tensor)."""
+
+        def apply(self, trainer, state, weights=None):
+            delta = jax.tree.map(
+                lambda g, p: g.astype(jnp.float32)
+                - jnp.mean(p, axis=0, dtype=jnp.float32),
+                state["global_params"], state["inner_params"],
+            )
+            delta = jax.tree.map(
+                lambda d: jnp.sign(d) * jnp.mean(jnp.abs(d)), delta)
+            return sync.outer_update(trainer, state, delta)
+
+        def outer_payload_bytes(self, n_params):
+            return n_params / 8.0  # 1 bit/param
+
+    try:
+        assert "sign" in sync.names()
+        trainer, data = _trainer(m=2, h=2, sync="sign")
+        assert trainer.sync_mode == "sign"
+        assert trainer.sync.compression_ratio == 16.0
+        state = trainer.init_state(jax.random.PRNGKey(0))
+        engine = SuperstepEngine(trainer, data, 1)
+        state, mets = engine.run(state, 4)
+        assert np.isfinite(mets["loss"]).all()
+        assert int(state["step"]) == 4
+        ck = Checkpointer(str(tmp_path), trainer=trainer)
+        ck.save(state, 4)
+        with open(tmp_path / "step_0000000004" / "manifest.json") as f:
+            assert json.load(f)["sync_mode"] == "sign"
+        assert sync.from_tag("sign") is SignSync
+        restored, step = Checkpointer(str(tmp_path), trainer=trainer).restore()
+        assert step == 4
+        for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    finally:
+        sync.unregister("sign")

@@ -56,6 +56,53 @@ def test_train_time_matches_hand_computed_appendix_a():
     assert abs(outer * h / steps - 0.241) < 1e-12
 
 
+def test_outer_payload_routing_hand_computed():
+    """Satellite regression: outer comm billed through the sync strategy's
+    payload accounting, hand-computed — int8 halves the outer bandwidth
+    term, int4 quarters it, streaming sends 1/P of the payload P times per
+    round (same total bytes, plus P-1 extra latency hits)."""
+    from repro.core import sync
+
+    n, budget, batch, m, h = 1e9, 20e9, 2**20, 4, 30
+    steps = budget / batch
+    # zero-latency cross net isolates the bandwidth term exactly
+    cross = wc.Network("medium0", 100e9, 0.0)
+    kw = dict(algorithm="diloco", m_replicas=m, sync_every=h,
+              cross_net=cross, within_net=wc.HIGH)
+    inner = (2.0 * n * 16 / 400e9 * (1 - 1 / 32) + 1e-4) * steps
+
+    def outer_comm(strat):
+        out = wc.train_time(
+            n, budget, batch,
+            outer_payload_bytes=strat.outer_payload_bytes(n),
+            outer_syncs_per_round=strat.sync_events_per_round, **kw)
+        return out["comm_s"] - inner
+
+    full = outer_comm(sync.get("full"))
+    # hand-computed: bf16 payload = 2N bytes -> 2*(2N)*8 bits on the wire
+    assert abs(full - 2.0 * (2 * n) * 8 / 100e9 * (1 - 1 / m) * steps / h) < 1e-9 * full
+    assert abs(outer_comm(sync.get("int8")) - full / 2) < 1e-9 * full
+    assert abs(outer_comm(sync.get("int4")) - full / 4) < 1e-9 * full
+    # streaming: P events of payload/P each == the full bandwidth term
+    assert abs(outer_comm(sync.get("streaming", fragments=4)) - full) < 1e-9 * full
+    # with latency, streaming pays the per-event latency P times
+    eps = 1e-3
+    lat_kw = dict(kw, cross_net=wc.Network("medium", 100e9, eps))
+    full_lat = wc.train_time(
+        n, budget, batch, outer_payload_bytes=2.0 * n,
+        outer_syncs_per_round=1, **lat_kw)["comm_s"] - inner
+    st = sync.get("streaming", fragments=4)
+    st_lat = wc.train_time(
+        n, budget, batch, outer_payload_bytes=st.outer_payload_bytes(n),
+        outer_syncs_per_round=st.sync_events_per_round, **lat_kw)["comm_s"] - inner
+    assert abs((st_lat - full_lat) - 3 * eps * steps / h) < 1e-9 * full_lat
+    # defaults reproduce the paper's full-precision accounting bitwise
+    a = wc.train_time(n, budget, batch, **kw)
+    b = wc.train_time(n, budget, batch, outer_payload_bytes=2.0 * n,
+                      outer_syncs_per_round=1, **kw)
+    assert a == b
+
+
 def test_bigger_batch_reduces_wallclock():
     """Horizontal scalability: doubling batch doubles chips, halves steps."""
     a = wc.train_time(n_params=1e9, token_budget=20e9, batch_tokens=2**19,
