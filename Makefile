@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test bench-smoke bench resume-smoke sweep-smoke bench-sweep bench-sweep-smoke
+.PHONY: verify test bench-smoke bench resume-smoke sweep-smoke chaos-smoke bench-sweep bench-sweep-smoke
 
 verify: test bench-smoke
 
@@ -29,6 +29,14 @@ resume-smoke:
 # checkpoints, then fit the ledger (results/SWEEP_smoke.jsonl + FITS_smoke.json)
 sweep-smoke:
 	$(PY) scripts/sweep_smoke.py
+
+# deterministic chaos drill: replica crash + rejoin under a fault schedule,
+# checksum-detectable checkpoint corruption with fallback to the last
+# intact one, transient I/O faults absorbed by retry, resume bitwise-equal
+# to the uninterrupted run of the same schedule; plus sweep-cell failure
+# containment (error ledger records keep the sweep alive)
+chaos-smoke:
+	$(PY) scripts/chaos_smoke.py
 
 # sweep-throughput bench: sequential vs shared-executable vs cell-stacked
 # on the 6-cell lr/seed grid; --check asserts stacked >= sequential

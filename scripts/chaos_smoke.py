@@ -1,0 +1,147 @@
+"""Chaos smoke: deterministic fault injection end to end.
+
+Part 1 — train / corrupt / resume:
+
+* Run A (reference): 30 steps of 2-replica DiLoCo under a fault schedule
+  that kills replica 1 for rounds 2-3 (rejoining — re-seeded from the
+  global params — at round 4) and makes replica 0 straggle, checkpointing
+  every 10 steps.  The checkpoint writes also absorb one injected
+  transient ``OSError`` via the bounded-backoff retry path.
+* The newest checkpoint (step 30) is then silently corrupted
+  *content-wise*: the ``.npz`` stays a perfectly valid archive, so only
+  the manifest-v3 per-leaf checksums can prove the payload rotten.
+* Run B resumes with ``--resume`` under the same schedule, with more
+  transient I/O faults injected into the restore path.  It must detect
+  the corruption, fall back to the intact step-20 checkpoint, and replay
+  steps 21-30 **bitwise-equal** to run A — faults, masks, and re-seeds
+  are all pure functions of ``(schedule, absolute step)``.
+
+Part 2 — sweep containment: a 2-cell sweep runs under injected transient
+ledger-append failures plus one injected cell failure; the sweep must
+retry, keep going, append the contained ``"error"`` record, and still
+complete every cell.
+
+Exit code is non-zero on any violated assertion.
+
+  PYTHONPATH=src python scripts/chaos_smoke.py
+"""
+import json
+import os
+import sys
+import tempfile
+import warnings
+
+from repro.checkpoint import SCHEMA_VERSION
+from repro.core import faults
+from repro.launch.train import build_argparser, make_run, train_loop
+
+# crash replica 1 for rounds [2, 4) of H=5 (steps 10-19); straggle replica 0
+MASKS = "crash:replica=1,at=2,rejoin=4;straggle:replica=0,start=1,stop=3,factor=2.5"
+BASE = [
+    "--arch", "tiny-t0", "--algorithm", "diloco", "--replicas", "2",
+    "--sync-every", "5", "--steps", "30", "--batch-tokens", "2048",
+    "--seq-len", "128", "--warmup", "2", "--eval-every", "0",
+    "--log-every", "0", "--checkpoint-every", "10", "--faults", MASKS,
+]
+
+
+def run(extra):
+    args = build_argparser().parse_args(BASE + extra)
+    _, trainer, data, steps = make_run(args)
+    _, history = train_loop(args, trainer, data, steps, quiet=True)
+    return history
+
+
+def part1() -> None:
+    with tempfile.TemporaryDirectory() as ckdir:
+        # -- run A: uninterrupted reference, one transient save fault ------
+        with faults.inject(MASKS + ";io:op=checkpoint_save,fails=1") as inj:
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")  # the retry warns; that's the point
+                full = run(["--checkpoint-dir", ckdir])
+        assert inj.raised.get("checkpoint_save") == 1, inj.raised
+        assert len(full) == 30
+
+        manifest = json.load(
+            open(os.path.join(ckdir, f"step_{30:010d}", "manifest.json")))
+        assert manifest["schema"] == SCHEMA_VERSION and manifest["checksums"], (
+            "expected a v3 manifest with per-leaf checksums")
+
+        # -- silently corrupt the newest checkpoint's payload --------------
+        faults.corrupt_npz(os.path.join(ckdir, f"step_{30:010d}", "state.npz"))
+
+        # -- run B: resume under the same schedule + transient read faults -
+        with faults.inject(MASKS + ";io:op=checkpoint_restore,fails=1") as inj:
+            with warnings.catch_warnings(record=True) as caught:
+                warnings.simplefilter("always")
+                resumed = run(["--checkpoint-dir", ckdir, "--resume"])
+        assert inj.raised.get("checkpoint_restore") == 1, inj.raised
+        fallback = [w for w in caught if "failed verification" in str(w.message)]
+        assert fallback, "corrupt checkpoint was not detected on restore"
+        assert "checksum" in str(fallback[0].message), fallback[0].message
+
+    assert resumed[0]["step"] == 21, (
+        f"expected fallback to the intact step-20 checkpoint; resume started "
+        f"at {resumed[0]['step'] - 1}")
+    ref = {r["step"]: r["loss"] for r in full}
+    bad = [(r["step"], ref[r["step"]], r["loss"])
+           for r in resumed if r["loss"] != ref[r["step"]]]
+    if bad:
+        for step, want, got in bad:
+            print(f"step {step}: uninterrupted {want!r} != resumed {got!r}")
+        raise AssertionError(
+            f"{len(bad)}/{len(resumed)} post-resume losses diverged under "
+            "the fault schedule")
+    print(f"chaos part 1 OK: corrupt step-30 checkpoint detected via v3 "
+          f"checksums, fell back to step 20, steps 21..30 bitwise-equal "
+          f"(final loss {full[-1]['loss']:.6f})")
+
+
+def part2() -> None:
+    from repro.configs.sweeps import SweepSpec
+    from repro.launch.sweep import read_ledger, run_sweep
+
+    sweep = SweepSpec(
+        name="chaos", archs=("tiny-t0",), modes=("diloco",), replicas=(2,),
+        sync_every=(2,), batch_tokens=(512,), seq_len=64, steps=4,
+        lrs=(1e-3, 3e-3), warmup_frac=0.25, eval_batches=2, eval_seqs=4,
+    )
+    with tempfile.TemporaryDirectory() as root:
+        ledger = os.path.join(root, "ledger.jsonl")
+        # cell 1 fails BOTH its attempts (contained); the error-record
+        # append then absorbs two transient ledger faults via retry
+        spec = "io:op=cell_run,fails=2;io:op=ledger_append,fails=2"
+        with faults.inject(spec) as inj:
+            out = run_sweep(sweep, ledger, os.path.join(root, "ckpt"),
+                            quiet=True, stack=False, cell_retries=1)
+        assert inj.raised == {"ledger_append": 2, "cell_run": 2}, inj.raised
+        failed = [r for r in out if r.get("error")]
+        assert len(failed) == 1 and failed[0]["record"] is None, (
+            "expected exactly one contained cell failure")
+        assert "transient cell_run" in failed[0]["error"], failed[0]
+        ok = [r for r in out if r["record"]]
+        assert len(ok) == 1, "the sweep should have stayed alive"
+        recs = [json.loads(line) for line in open(ledger)]
+        assert any("error" in r for r in recs), recs
+        done = read_ledger(ledger)
+        assert len(done) == 1, "an error record must not mark its cell done"
+
+        # a later sweep picks the contained cell back up and completes it
+        out2 = run_sweep(sweep, ledger, os.path.join(root, "ckpt"),
+                         quiet=True, stack=False)
+        assert all(r["record"] for r in out2), out2
+        assert sum(r["skipped"] for r in out2) == 1, out2
+        assert len(read_ledger(ledger)) == 2
+    print("chaos part 2 OK: sweep survived transient ledger faults, "
+          "contained a failing cell, and completed it on the next sweep")
+
+
+def main() -> int:
+    part1()
+    part2()
+    print("chaos smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,5 +1,6 @@
 from repro.checkpoint.checkpointer import (  # noqa: F401
     SCHEMA_VERSION,
     Checkpointer,
+    CorruptCheckpointError,
     config_fingerprint,
 )

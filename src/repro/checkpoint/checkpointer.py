@@ -6,13 +6,24 @@ dir after the rename) before an atomic ``os.replace`` — a crash mid-save can
 never corrupt the newest checkpoint, and orphaned ``.tmp`` dirs from a crash
 are reaped on the next ``Checkpointer(...)`` construction.
 
-Manifest schema v2 records everything needed to restore without a live
-template: schema version, step, per-leaf dtypes/shapes, ``num_replicas``,
-the sync mode — the trainer's ``SyncStrategy`` manifest tag (``none`` /
-``int8`` / ``streaming`` / ``dp`` / ``int4`` / any registered strategy's;
-``repro.core.sync.from_tag`` maps a tag back to its strategy class, with
-``"none"`` permanently aliased to the full-precision strategy) — and a
-config fingerprint.  v1 directories (``{"step", "keys"}`` only) still load.
+Manifest schema v3 records everything needed to restore without a live
+template: schema version, step, per-leaf dtypes/shapes, per-leaf content
+**checksums**, ``num_replicas``, the sync mode — the trainer's
+``SyncStrategy`` manifest tag (``none`` / ``int8`` / ``streaming`` /
+``dp`` / ``int4`` / any registered strategy's; ``repro.core.sync.from_tag``
+maps a tag back to its strategy class, with ``"none"`` permanently aliased
+to the full-precision strategy) — and a config fingerprint.  v1
+directories (``{"step", "keys"}`` only) and v2 (no checksums) still load.
+
+Hardened I/O (fault-tolerant runtime): every payload read/write is wrapped
+in ``repro.core.retry`` bounded exponential backoff, and checks
+``repro.core.faults.io_check`` so chaos schedules can inject transient
+``OSError``s.  On restore, v3 checksums are verified leaf-by-leaf; a
+checkpoint that fails verification (bit rot, torn write, truncated zip)
+raises ``CorruptCheckpointError`` — and a *latest*-checkpoint restore
+falls back to the newest older intact checkpoint with a warning, so a
+single corrupt save never strands a resumable run.  An explicit
+``restore(step=...)`` never falls back silently.
 
 Restore paths:
 
@@ -47,14 +58,27 @@ import queue
 import shutil
 import threading
 import warnings
-from typing import Any, Optional, Tuple
+import zipfile
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
 
-SCHEMA_VERSION = 2
+from repro.core import faults, retry
+
+SCHEMA_VERSION = 3
 
 _SENTINEL = object()
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint failed content verification (missing payload, unreadable
+    archive, or a manifest-v3 per-leaf checksum mismatch)."""
+
+
+def _digest(arr: np.ndarray) -> str:
+    """Content checksum of one leaf (dtype/shape are manifested separately)."""
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()[:16]
 
 
 def _flatten(tree) -> dict:
@@ -142,10 +166,12 @@ class Checkpointer:
         *,
         trainer: Any = None,
         max_inflight: int = 2,
+        retry_policy: Optional[retry.Policy] = None,
     ):
         self.dir = directory
         self.keep = keep
         self.trainer = trainer
+        self._retry = retry_policy if retry_policy is not None else retry.Policy()
         os.makedirs(directory, exist_ok=True)
         self._reap_tmp()
         self._q: "queue.Queue" = queue.Queue(maxsize=max(1, max_inflight))
@@ -166,6 +192,8 @@ class Checkpointer:
             "keys": sorted(flat),
             "dtypes": {k: str(v.dtype) for k, v in flat.items()},
             "shapes": {k: list(v.shape) for k, v in flat.items()},
+            # v3: per-leaf content checksums, verified on restore
+            "checksums": {k: _digest(v) for k, v in flat.items()},
         }
         if self.trainer is not None:
             man["num_replicas"] = int(self.trainer.M)
@@ -188,6 +216,21 @@ class Checkpointer:
         return self._write(flat, step)
 
     def _write(self, flat: dict, step: int) -> str:
+        # _write_once is restartable from scratch (the .tmp staging dir is
+        # rebuilt per attempt), so transient OSErrors — real or injected via
+        # repro.core.faults — are absorbed by bounded backoff.
+        return retry.call(
+            lambda: self._write_once(flat, step),
+            policy=self._retry,
+            retry_on=(OSError,),
+            on_retry=lambda n, e: warnings.warn(
+                f"checkpoint save (step {step}) attempt {n} failed: {e}; retrying",
+                stacklevel=2,
+            ),
+        )
+
+    def _write_once(self, flat: dict, step: int) -> str:
+        faults.io_check("checkpoint_save")
         final = os.path.join(self.dir, f"step_{step:010d}")
         tmp = final + ".tmp"
         if os.path.exists(tmp):
@@ -216,6 +259,9 @@ class Checkpointer:
         else:
             os.replace(tmp, final)
             _fsync_path(self.dir)
+        # chaos hook: scheduled payload corruption lands AFTER the atomic
+        # publish, modelling bit rot the filesystem never sees
+        faults.on_checkpoint_written(final, step)
         self._gc()
         return final
 
@@ -278,13 +324,56 @@ class Checkpointer:
             raise err
 
     # ---- restore ---------------------------------------------------------
-    def latest_step(self) -> Optional[int]:
-        steps = [
+    def _steps(self) -> List[int]:
+        return sorted(
             int(d.split("_")[1])
             for d in os.listdir(self.dir)
             if d.startswith("step_") and not d.endswith(".tmp")
-        ]
-        return max(steps) if steps else None
+        )
+
+    def latest_step(self) -> Optional[int]:
+        steps = self._steps()
+        return steps[-1] if steps else None
+
+    def _load_verified(self, step: int) -> Tuple[dict, dict]:
+        """Load + verify one checkpoint's payload and manifest.
+
+        Transient read errors are retried; anything that survives the
+        retries — or a v3 per-leaf checksum mismatch — raises
+        ``CorruptCheckpointError``.  v1/v2 manifests (no checksums) load
+        without content verification.
+        """
+        path = os.path.join(self.dir, f"step_{step:010d}", "state.npz")
+        if not os.path.exists(path):
+            raise CorruptCheckpointError(f"missing payload {path}")
+
+        def read():
+            faults.io_check("checkpoint_restore")
+            with np.load(path) as z:
+                return {k: z[k] for k in z.files}
+
+        try:
+            flat = retry.call(read, policy=self._retry, retry_on=(OSError,))
+        except (OSError, ValueError, KeyError, EOFError, zipfile.BadZipFile) as e:
+            raise CorruptCheckpointError(f"unreadable payload {path}: {e}") from e
+        try:
+            manifest = self._read_manifest(step)
+        except (OSError, ValueError) as e:  # json.JSONDecodeError is a ValueError
+            raise CorruptCheckpointError(
+                f"unreadable manifest for step {step}: {e}"
+            ) from e
+        for key, want in sorted(manifest.get("checksums", {}).items()):
+            if key not in flat:
+                raise CorruptCheckpointError(
+                    f"step {step}: leaf {key!r} missing from payload"
+                )
+            got = _digest(flat[key])
+            if got != want:
+                raise CorruptCheckpointError(
+                    f"step {step}: leaf {key!r} checksum {got} != manifest "
+                    f"{want} (v3 content verification)"
+                )
+        return flat, manifest
 
     def restore(
         self,
@@ -296,14 +385,33 @@ class Checkpointer:
     ) -> Tuple[Any, int]:
         """Restore a checkpoint; see the module docstring for the three
         modes (template / template-free / elastic).  Returns (state, step)."""
+        explicit = step is not None
         if step is None:
             step = self.latest_step()
             if step is None:
                 raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        path = os.path.join(self.dir, f"step_{step:010d}", "state.npz")
-        with np.load(path) as z:
-            flat = {k: z[k] for k in z.files}
-        manifest = self._read_manifest(step)
+        while True:
+            try:
+                flat, manifest = self._load_verified(step)
+                break
+            except CorruptCheckpointError as e:
+                if explicit:
+                    # the caller named this step; falling back silently
+                    # would resume from somewhere they did not ask for
+                    raise
+                older = [s for s in self._steps() if s < step]
+                if not older:
+                    raise CorruptCheckpointError(
+                        f"no intact checkpoint in {self.dir} "
+                        f"(newest failure: {e})"
+                    ) from e
+                warnings.warn(
+                    f"checkpoint step {step} failed verification ({e}); "
+                    f"falling back to the last intact checkpoint "
+                    f"(step {max(older)})",
+                    stacklevel=2,
+                )
+                step = max(older)
         self._sync_hparams(flat, template)
 
         if template is not None:

@@ -129,11 +129,11 @@ class CellBatchEngine:
         ])
 
     # ---- compiled round -------------------------------------------------
-    def _round_fn(self, length: int, do_sync: bool):
+    def _round_fn(self, length: int, do_sync: bool, has_weights: bool = False):
         key = (
             "cellbatch", static_signature(self.trainer), self.K, length,
             do_sync, self.donate, min(self.unroll, length), self.batch_seqs,
-            self.seq_len,
+            self.seq_len, has_weights,
         )
 
         def build():
@@ -142,9 +142,11 @@ class CellBatchEngine:
                 batch_seqs=self.batch_seqs, seq_len=self.seq_len,
                 on_device_data=True, unroll=self.unroll,
             )
-            # cell axis: state / datagen operands are per-cell; xs and
-            # weights are unused on this path (None pytrees)
-            vfn = jax.vmap(fn, in_axes=(0, None, 0, 0, None))
+            # cell axis: state / datagen operands are per-cell; xs is unused
+            # on this path (None pytree); participation weights, when
+            # present, are per-cell (K, M) — a traced operand, so every
+            # mask sequence reuses this one executable
+            vfn = jax.vmap(fn, in_axes=(0, None, 0, 0, 0 if has_weights else None))
             return jax.jit(vfn, donate_argnums=(0,) if self.donate else ())
 
         if not self.share:
@@ -155,10 +157,13 @@ class CellBatchEngine:
         return jitcache.get_or_build(key, build, self._local_rounds)
 
     # ---- driving --------------------------------------------------------
-    def run_round(self, states, start: int, length: Optional[int] = None):
+    def run_round(self, states, start: int, length: Optional[int] = None,
+                  weights=None):
         """One stacked round: ``length`` inner steps for all K cells (plus
         the outer sync on H boundaries) in one executable.  Returns
         ``(states, metrics)`` with metrics as ``(K, length)`` host arrays.
+        ``weights``: optional (K, M) per-cell outer-sync participation
+        weights (partial participation under a fault schedule).
         CONSUMES ``states``."""
         length = self.chunk if length is None else length
         end = start + length
@@ -171,8 +176,15 @@ class CellBatchEngine:
                     f"sync_every={self.chunk} (engine.run does this)"
                 )
         do_sync = (end % self.chunk == 0) and self.trainer.sync.pins_round_boundary
-        states, metrics = self._round_fn(length, do_sync)(
-            states, None, self._droot, self._dlogits, None)
+        if weights is not None:
+            weights = jnp.asarray(weights, jnp.float32)
+            if weights.shape != (self.K, self.trainer.M):
+                raise ValueError(
+                    f"weights must be (K={self.K}, M={self.trainer.M}); "
+                    f"got {weights.shape}"
+                )
+        states, metrics = self._round_fn(length, do_sync, weights is not None)(
+            states, None, self._droot, self._dlogits, weights)
         return states, jax.device_get(metrics)
 
     def round_bounds(self, step: int, steps: int) -> Tuple[int, int]:

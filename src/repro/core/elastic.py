@@ -24,10 +24,75 @@ import jax.numpy as jnp
 
 
 def participation_weights(mask) -> jax.Array:
-    """(M,) bool -> normalized weights; all-False falls back to uniform."""
+    """(M,) bool -> float32 weights summing to 1 over the survivors.
+
+    Raises ``ValueError`` on an all-dead mask: silently falling back to a
+    uniform average would sync from replicas that did no work this round,
+    and dividing by a zero survivor count would NaN the global model.
+    Host-side entry point — the mask must be concrete (the train loop
+    builds it from the fault schedule before handing the *weights* to the
+    compiled round as a traced operand).
+    """
     m = jnp.asarray(mask, jnp.float32)
     total = m.sum()
-    return jnp.where(total > 0, m, jnp.ones_like(m))
+    if not bool(total > 0):
+        raise ValueError(
+            "all-dead participation mask: every replica is excluded from "
+            "the outer sync — the round cannot produce a global update"
+        )
+    return m / total
+
+
+def reseed_replicas(trainer, state: dict, rejoin_mask) -> dict:
+    """Re-seed the masked replicas from the global model (between rounds).
+
+    A replica that rejoins after missing rounds holds stale inner params
+    and — worse — stale AdamW moments and a stale Adam ``count``.  This
+    applies ``resize_replicas``'s cold-start semantics *in place*: where
+    ``rejoin_mask`` is True, inner params are reset to the global params,
+    AdamW moments and error-feedback residuals to zero, and the Adam
+    ``count`` to zero (correct ``1-β^1`` bias correction on the first
+    post-rejoin step).  Surviving replicas are untouched bitwise.
+
+    The mask is a **traced** (M,) operand — one compiled executable (cached
+    by the trainer's static signature, PR-4 pattern) serves every mask
+    sequence with zero recompiles.  Call at a round *start*, after the
+    previous round's outer sync.
+    """
+    assert trainer.sync.uses_outer_opt, "reseed needs a global model"
+    from repro.core import jitcache
+    from repro.core.diloco import static_signature
+
+    extra = tuple(k for k in trainer.sync.extra_state_keys if k in state)
+    key = ("reseed", static_signature(trainer), extra)
+
+    def build():
+        def fn(st, mask):
+            def sel(leaf, fresh):
+                m = mask.reshape((mask.shape[0],) + (1,) * (leaf.ndim - 1))
+                return jnp.where(m, fresh.astype(leaf.dtype), leaf)
+
+            gp = st["global_params"]
+            out = dict(st)
+            out["inner_params"] = jax.tree.map(
+                lambda p, g: sel(p, jnp.broadcast_to(g[None], p.shape)),
+                st["inner_params"], gp,
+            )
+            opt = st["inner_opt"]
+            zero = lambda leaf: sel(leaf, jnp.zeros_like(leaf))
+            out["inner_opt"] = {
+                "m": jax.tree.map(zero, opt["m"]),
+                "v": jax.tree.map(zero, opt["v"]),
+                "count": jnp.where(mask, jnp.zeros_like(opt["count"]), opt["count"]),
+            }
+            for k in extra:
+                out[k] = jax.tree.map(zero, st[k])
+            return out
+
+        return jax.jit(fn, donate_argnums=(0,))
+
+    fn = jitcache.get_or_build(key, build, trainer._jit_cache)
+    return fn(state, jnp.asarray(rejoin_mask, bool))
 
 
 def resize_replicas(trainer, state: dict, new_m: int) -> dict:

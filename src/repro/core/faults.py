@@ -1,0 +1,366 @@
+"""Deterministic fault injection for chaos testing the DiLoCo runtime.
+
+A :class:`FaultSchedule` is an immutable, fully explicit list of fault
+events — replica crashes (with optional rejoin), straggler slowdowns,
+transient I/O errors, and checkpoint-payload corruption.  Everything a
+chaos run does is a pure function of ``(schedule, call order)``: the same
+schedule replayed against the same run produces bit-identical faults,
+which is what lets ``scripts/chaos_smoke.py`` assert that a crashed-and-
+resumed run matches an uninterrupted run of the *same* schedule bitwise.
+
+Round semantics (matching the train loop): outer round ``r`` covers inner
+steps ``[r*H, (r+1)*H)``.  A replica with ``ReplicaCrash(at=2, rejoin=4)``
+computes rounds 0–1, is dead (masked out of the outer average) for rounds
+2–3, and participates again from round 4 — at which point the train loop
+re-seeds it from the global params (``elastic.reseed_replicas``).
+
+I/O faults are delivered through a process-global injector installed with
+:func:`inject` — global rather than a contextvar because the checkpoint
+writer runs on a background thread that does not inherit context.  Code
+at I/O boundaries calls :func:`io_check(op)`; with no injector installed
+it is a no-op, so production paths pay one global read.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+# I/O operation names checked by the runtime.  User schedules may name
+# additional ops (e.g. a test-local boundary) — unknown ops simply never
+# fire unless something calls io_check() with that name.
+KNOWN_OPS = ("checkpoint_save", "checkpoint_restore", "ledger_append", "cell_run")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaCrash:
+    """Replica ``replica`` is dead for rounds ``[at, rejoin)``.
+
+    ``rejoin=-1`` means it never comes back.  While dead the replica is
+    masked out of the outer average; at round ``rejoin`` it participates
+    again after being re-seeded from the global params.
+    """
+
+    replica: int
+    at: int
+    rejoin: int = -1
+
+    def dead(self, rnd: int) -> bool:
+        return rnd >= self.at and (self.rejoin < 0 or rnd < self.rejoin)
+
+
+@dataclasses.dataclass(frozen=True)
+class Straggler:
+    """Replica ``replica`` runs ``factor``x slower for rounds ``[start, stop)``."""
+
+    replica: int
+    start: int
+    stop: int
+    factor: float = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class IOFault:
+    """The first ``fails`` calls to ``io_check(op)`` raise a transient OSError."""
+
+    op: str
+    fails: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class CorruptCheckpoint:
+    """The checkpoint written at inner step ``step`` has its payload
+    corrupted immediately after the (atomic) write publishes it —
+    modelling bit rot / a torn write that the filesystem did not catch."""
+
+    step: int
+
+
+Event = Union[ReplicaCrash, Straggler, IOFault, CorruptCheckpoint]
+
+_KINDS = {
+    "crash": ReplicaCrash,
+    "straggle": Straggler,
+    "io": IOFault,
+    "corrupt": CorruptCheckpoint,
+}
+_NAMES = {cls: kind for kind, cls in _KINDS.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """A seeded, immutable set of fault events.
+
+    ``seed`` tags the schedule (and seeds :meth:`random` generation); the
+    events themselves are always explicit, so ``(seed, schedule)`` fully
+    determines every chaos run.
+    """
+
+    events: Tuple[Event, ...] = ()
+    seed: int = 0
+
+    # -- round-level queries -------------------------------------------------
+    def participation_mask(self, rnd: int, m: int) -> np.ndarray:
+        """(m,) bool — which replicas participate in outer round ``rnd``."""
+        mask = np.ones(m, dtype=bool)
+        for ev in self.events:
+            if isinstance(ev, ReplicaCrash) and 0 <= ev.replica < m and ev.dead(rnd):
+                mask[ev.replica] = False
+        return mask
+
+    def rejoin_mask(self, rnd: int, m: int) -> np.ndarray:
+        """(m,) bool — replicas participating in round ``rnd`` that were
+        dead in round ``rnd - 1`` (empty at round 0): these must be
+        re-seeded from the global params before the round starts."""
+        if rnd <= 0:
+            return np.zeros(m, dtype=bool)
+        return self.participation_mask(rnd, m) & ~self.participation_mask(rnd - 1, m)
+
+    def slowdowns(self, rnd: int, m: int) -> np.ndarray:
+        """(m,) float — per-replica slowdown factor (>= 1) in round ``rnd``."""
+        s = np.ones(m, dtype=np.float64)
+        for ev in self.events:
+            if (
+                isinstance(ev, Straggler)
+                and 0 <= ev.replica < m
+                and ev.start <= rnd < ev.stop
+            ):
+                s[ev.replica] = max(s[ev.replica], float(ev.factor))
+        return s
+
+    def round_slowdown(self, rnd: int, m: int) -> float:
+        """Round time multiplier: max slowdown over *participating*
+        replicas (a dead replica gates nothing; everyone waits for the
+        slowest survivor at the outer barrier)."""
+        mask = self.participation_mask(rnd, m)
+        if not mask.any():
+            return 1.0
+        return float(self.slowdowns(rnd, m)[mask].max())
+
+    def mean_slowdown(self, rounds: int, m: int) -> float:
+        """Mean of :meth:`round_slowdown` over rounds ``[0, rounds)`` —
+        the aggregate straggler factor for ``wallclock.train_time``."""
+        if rounds <= 0:
+            return 1.0
+        return float(
+            np.mean([self.round_slowdown(r, m) for r in range(int(rounds))])
+        )
+
+    # -- I/O / corruption queries --------------------------------------------
+    def io_fails(self) -> Dict[str, int]:
+        """Total transient failures per I/O op (multiple events merge)."""
+        out: Dict[str, int] = {}
+        for ev in self.events:
+            if isinstance(ev, IOFault):
+                out[ev.op] = out.get(ev.op, 0) + int(ev.fails)
+        return out
+
+    def corrupt_steps(self) -> Tuple[int, ...]:
+        return tuple(
+            ev.step for ev in self.events if isinstance(ev, CorruptCheckpoint)
+        )
+
+    def has_replica_events(self) -> bool:
+        return any(isinstance(ev, (ReplicaCrash, Straggler)) for ev in self.events)
+
+    # -- spec string round-trip ----------------------------------------------
+    def spec(self) -> str:
+        """Serialize to the ``--faults`` spec grammar (``parse`` inverse)."""
+        parts = []
+        for ev in self.events:
+            kv = ",".join(
+                f"{f.name}={_fmt(getattr(ev, f.name))}"
+                for f in dataclasses.fields(ev)
+            )
+            parts.append(f"{_NAMES[type(ev)]}:{kv}")
+        if self.seed:
+            parts.append(f"seed={self.seed}")
+        return ";".join(parts)
+
+    @classmethod
+    def random(
+        cls,
+        seed: int,
+        *,
+        m: int,
+        rounds: int,
+        crash_rate: float = 0.3,
+        straggle_rate: float = 0.3,
+        io_rate: float = 0.5,
+    ) -> "FaultSchedule":
+        """Generate an explicit schedule from a seed — the events are
+        materialized up front, so the run is reproducible from the
+        returned schedule alone (``seed`` is only a generation recipe)."""
+        rng = np.random.default_rng(seed)
+        events: List[Event] = []
+        for rep in range(m):
+            if m > 1 and rng.random() < crash_rate:
+                at = int(rng.integers(1, max(2, rounds)))
+                rejoin = int(min(at + int(rng.integers(1, 3)), rounds))
+                events.append(ReplicaCrash(replica=rep, at=at, rejoin=rejoin))
+            if rng.random() < straggle_rate:
+                start = int(rng.integers(0, max(1, rounds)))
+                stop = int(min(start + int(rng.integers(1, 3)), rounds))
+                if stop > start:
+                    factor = float(np.round(1.5 + 2.0 * rng.random(), 2))
+                    events.append(Straggler(rep, start, stop, factor))
+        for op in ("checkpoint_save", "ledger_append"):
+            if rng.random() < io_rate:
+                events.append(IOFault(op=op, fails=int(rng.integers(1, 3))))
+        return cls(events=tuple(events), seed=seed)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return repr(v)
+    return str(v)
+
+
+def parse(spec: str) -> FaultSchedule:
+    """Parse a fault spec string into a :class:`FaultSchedule`.
+
+    Grammar: ``;``-separated elements, each ``kind:key=value,...`` with
+    kinds ``crash`` / ``straggle`` / ``io`` / ``corrupt``, plus an
+    optional bare ``seed=N`` element.  Example::
+
+        crash:replica=1,at=2,rejoin=4;straggle:replica=0,start=1,stop=3,factor=2.5;io:op=ledger_append,fails=2;corrupt:step=30;seed=7
+
+    ``parse(s).spec()`` round-trips.
+    """
+    events: List[Event] = []
+    seed = 0
+    for raw in spec.split(";"):
+        part = raw.strip()
+        if not part:
+            continue
+        if part.startswith("seed="):
+            seed = int(part[len("seed="):])
+            continue
+        kind, _, body = part.partition(":")
+        cls = _KINDS.get(kind)
+        if cls is None:
+            raise ValueError(
+                f"unknown fault kind {kind!r} in {part!r} "
+                f"(expected one of {sorted(_KINDS)})"
+            )
+        kwargs = {}
+        types = {f.name: f.type for f in dataclasses.fields(cls)}
+        for item in filter(None, (s.strip() for s in body.split(","))):
+            key, eq, val = item.partition("=")
+            if not eq or key not in types:
+                raise ValueError(f"bad option {item!r} for fault {kind!r}")
+            kwargs[key] = float(val) if "float" in str(types[key]) else (
+                val if "str" in str(types[key]) else int(val)
+            )
+        events.append(cls(**kwargs))
+    return FaultSchedule(events=tuple(events), seed=seed)
+
+
+class TransientIOError(OSError):
+    """The injected transient I/O failure (an ``OSError`` so production
+    retry paths treat it exactly like the real thing)."""
+
+
+class FaultInjector:
+    """Delivers a schedule's I/O faults and corruption events.
+
+    Thread-safe: the checkpoint writer thread and the main thread both
+    call :meth:`io_check`.  ``calls`` / ``raised`` expose per-op counters
+    so tests can assert exactly which faults fired.
+    """
+
+    def __init__(self, schedule: FaultSchedule):
+        self.schedule = schedule
+        self._lock = threading.Lock()
+        self._remaining = dict(schedule.io_fails())
+        self.calls: Dict[str, int] = {}
+        self.raised: Dict[str, int] = {}
+        self.corrupted: List[Tuple[int, str]] = []
+
+    def io_check(self, op: str) -> None:
+        with self._lock:
+            self.calls[op] = self.calls.get(op, 0) + 1
+            if self._remaining.get(op, 0) > 0:
+                self._remaining[op] -= 1
+                self.raised[op] = self.raised.get(op, 0) + 1
+                n = self.raised[op]
+            else:
+                return
+        raise TransientIOError(f"injected transient {op} failure #{n}")
+
+    def on_checkpoint_written(self, path: str, step: int) -> None:
+        if step in self.schedule.corrupt_steps():
+            corrupt_npz(os.path.join(path, "state.npz"))
+            with self._lock:
+                self.corrupted.append((step, path))
+
+
+_ACTIVE: Optional[FaultInjector] = None
+_ACTIVE_LOCK = threading.Lock()
+
+
+@contextlib.contextmanager
+def inject(schedule: Union[FaultSchedule, FaultInjector, str]):
+    """Install a process-global injector for the ``with`` body.
+
+    Accepts a schedule, a spec string, or a prebuilt injector (yielded
+    either way, so callers can inspect its counters afterwards).
+    """
+    global _ACTIVE
+    if isinstance(schedule, str):
+        schedule = parse(schedule)
+    injector = (
+        schedule if isinstance(schedule, FaultInjector) else FaultInjector(schedule)
+    )
+    with _ACTIVE_LOCK:
+        if _ACTIVE is not None:
+            raise RuntimeError("a fault injector is already active")
+        _ACTIVE = injector
+    try:
+        yield injector
+    finally:
+        with _ACTIVE_LOCK:
+            _ACTIVE = None
+
+
+def active() -> Optional[FaultInjector]:
+    return _ACTIVE
+
+
+def io_check(op: str) -> None:
+    """Hook for I/O boundaries: raises the next scheduled transient
+    ``OSError`` for ``op``, if any.  No-op when no injector is active."""
+    inj = _ACTIVE
+    if inj is not None:
+        inj.io_check(op)
+
+
+def on_checkpoint_written(path: str, step: int) -> None:
+    """Hook the checkpointer calls after atomically publishing a
+    checkpoint directory — applies any scheduled payload corruption."""
+    inj = _ACTIVE
+    if inj is not None:
+        inj.on_checkpoint_written(path, step)
+
+
+def corrupt_npz(path: str) -> None:
+    """Corrupt an ``.npz`` payload *content-wise* while keeping it a
+    loadable archive: every array is perturbed, so only manifest-v3
+    content checksums (not zip CRCs alone) can prove it intact.  Used by
+    the chaos smoke to model silent corruption."""
+    with np.load(path) as z:
+        arrays = {k: np.array(z[k]) for k in z.files}
+    for k, v in arrays.items():
+        if v.size:
+            raw = np.frombuffer(v.tobytes(), dtype=np.uint8) ^ 0xFF
+            arrays[k] = np.frombuffer(raw.tobytes(), dtype=v.dtype).reshape(v.shape)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)

@@ -1,0 +1,67 @@
+"""Bounded exponential backoff for transient I/O failures.
+
+The fault-tolerant runtime wraps every side-effecting I/O boundary
+(checkpoint save/restore, ledger appends) in :func:`call`.  The policy is
+deliberately tiny: a fixed number of attempts with exponentially growing,
+capped delays.  Determinism matters more than sophistication here — tests
+pass a fake ``sleep`` to assert the exact delay sequence, and chaos runs
+must replay identically from a :class:`repro.core.faults.FaultSchedule`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterator, Optional, Tuple, Type
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Backoff policy: ``attempts`` total tries, delays ``base_delay *
+    multiplier**k`` (capped at ``max_delay``) between consecutive tries."""
+
+    attempts: int = 3
+    base_delay: float = 0.05
+    multiplier: float = 2.0
+    max_delay: float = 2.0
+
+    def __post_init__(self):
+        if self.attempts < 1:
+            raise ValueError(f"attempts must be >= 1, got {self.attempts}")
+
+
+DEFAULT = Policy()
+
+
+def delays(policy: Policy = DEFAULT) -> Iterator[float]:
+    """The ``attempts - 1`` sleep durations between consecutive tries."""
+    d = policy.base_delay
+    for _ in range(policy.attempts - 1):
+        yield min(d, policy.max_delay)
+        d *= policy.multiplier
+
+
+def call(
+    fn: Callable,
+    *,
+    policy: Policy = DEFAULT,
+    retry_on: Tuple[Type[BaseException], ...] = (OSError,),
+    sleep: Callable[[float], None] = time.sleep,
+    on_retry: Optional[Callable[[int, BaseException], None]] = None,
+):
+    """Invoke ``fn()`` with bounded retries.
+
+    Exceptions not in ``retry_on`` propagate immediately; the final
+    attempt's exception propagates unwrapped.  ``on_retry(attempt, exc)``
+    fires before each sleep (attempt is 1-based), and ``sleep`` is
+    injectable so tests run on a deterministic clock.
+    """
+    pause = iter(delays(policy))
+    for attempt in range(1, policy.attempts + 1):
+        try:
+            return fn()
+        except retry_on as exc:
+            if attempt == policy.attempts:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, exc)
+            sleep(next(pause))

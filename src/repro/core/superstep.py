@@ -162,6 +162,10 @@ class RoundPrefetcher:
         self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
         self._pending: Dict[Tuple[int, int], concurrent.futures.Future] = {}
         self._closed = threading.Event()
+        # a worker-thread failure parks here and re-raises at the next
+        # get() — a raising data source must never be silently discarded
+        # with a mispredicted future
+        self._error: Optional[BaseException] = None
 
     def _build(self, start: int, length: int):
         rounds = []
@@ -179,24 +183,45 @@ class RoundPrefetcher:
             return None
         return jax.device_put(stacked)
 
+    def _submit(self, start: int, length: int):
+        def task():
+            try:
+                return self._build(start, length)
+            except BaseException as e:  # surfaced at the next get()
+                self._error = e
+                return None
+
+        return self._pool.submit(task)
+
     def schedule(self, start: int, length: int) -> None:
         key = (start, length)
         if key not in self._pending:
-            self._pending[key] = self._pool.submit(self._build, start, length)
+            self._pending[key] = self._submit(start, length)
 
     def get(self, start: int, length: int, next_length: Optional[int] = None):
         """Return the (start, length) round; prefetch the following round of
         ``next_length`` steps (default: same length; 0 = end of training,
         prefetch nothing).  Mis-predicted pending rounds are discarded so
-        stale batches don't pin device memory."""
+        stale batches don't pin device memory.  A data-source exception on
+        the worker thread re-raises here, at the next fetch — never
+        silently swallowed with a discarded future."""
         if self._closed.is_set():
             raise RuntimeError("RoundPrefetcher is closed")
+        err, self._error = self._error, None
+        if err is not None:
+            raise err
         fut = self._pending.pop((start, length), None)
         for stale in list(self._pending):
             self._pending.pop(stale).cancel()
         xs = fut.result() if fut is not None else None
-        if xs is None:  # not scheduled, or the build lost a race with close()
-            xs = self._build(start, length)
+        if xs is None:  # unscheduled, lost a race with close(), or failed
+            try:
+                # a worker failure for THIS round lands here too: rebuild
+                # synchronously so the original error (re-)raises in the
+                # caller, and drop the parked copy — it has been delivered
+                xs = self._build(start, length)
+            finally:
+                self._error = None
         next_length = length if next_length is None else next_length
         if next_length > 0:
             self.schedule(start + length, next_length)

@@ -71,6 +71,7 @@ def train_time(
     within_net: Network = HIGH,
     outer_payload_bytes: float = None,
     outer_syncs_per_round: int = 1,
+    straggler_factor: float = 1.0,
 ) -> dict:
     """End-to-end idealized wall-clock seconds (Appendix A.3).
 
@@ -82,10 +83,23 @@ def train_time(
     hits).  Defaults reproduce the paper's full-precision bf16 accounting.
     The per-step gradient all-reduce (DP and the DiLoCo inner term) always
     bills full-precision grads — outer-Δ compression does not touch it.
+
+    ``straggler_factor`` (>= 1) scales the compute term for heterogeneous
+    replicas: each outer round runs at the pace of its slowest
+    *participating* replica, so under a fault schedule the factor is
+    ``FaultSchedule.mean_slowdown(rounds, M)`` — the mean over rounds of
+    the max slowdown among survivors.  The default (1.0) is bitwise
+    identical to the fault-free model.
     """
     steps = token_budget / batch_tokens
     r = num_chips(batch_tokens)
     comp = compute_time(n_params, token_budget, r)
+    straggler_s = 0.0
+    if straggler_factor != 1.0:
+        if straggler_factor < 1.0:
+            raise ValueError(f"straggler_factor must be >= 1, got {straggler_factor}")
+        straggler_s = comp * (straggler_factor - 1.0)
+        comp = comp + straggler_s
     if outer_payload_bytes is None:
         outer_payload_bytes = n_params * BITS_PER_PARAM / 8.0
 
@@ -106,10 +120,13 @@ def train_time(
             * outer_syncs_per_round * steps / sync_every
         )
         comm = inner + outer
-    return {
+    out = {
         "steps": steps,
         "chips": r,
         "compute_s": comp,
         "comm_s": comm,
         "total_s": comp + comm,
     }
+    if straggler_s:
+        out["straggler_s"] = straggler_s
+    return out

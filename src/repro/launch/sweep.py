@@ -46,12 +46,14 @@ import math
 import os
 import shutil
 import time
+import warnings
 from functools import lru_cache
 
 import numpy as np
 
 from repro.configs import get_config, get_sweep
 from repro.configs.sweeps import SweepSpec, default_lr
+from repro.core import faults, retry
 from repro.core import sync as sync_lib
 from repro.core.cellbatch import CellBatchEngine
 from repro.launch.train import (
@@ -337,22 +339,36 @@ def run_cell_batch(
 
 def read_ledger(path: str) -> dict:
     """Completed cells by id.  Append-only JSONL: a crash mid-append can
-    leave one truncated trailing line — tolerate and drop it (the cell will
-    simply re-run, resuming from its checkpoints)."""
+    leave one truncated trailing line — tolerate and drop it silently (the
+    cell will simply re-run, resuming from its checkpoints).  A corrupted
+    line anywhere *else* means the file was damaged after the fact (bit
+    rot, a concurrent writer, manual editing): skip it too, but with a
+    warning, so the damage is visible and at worst re-runs one cell.
+    ``"error"`` records (contained cell failures) never mark a cell done."""
     done = {}
     if not os.path.exists(path):
         return done
     with open(path) as f:
-        for line in f:
-            line = line.strip()
-            if not line:
-                continue
-            try:
-                rec = json.loads(line)
-            except json.JSONDecodeError:
+        lines = f.read().splitlines()
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
                 continue  # truncated tail from a killed writer
-            if rec.get("schema") == LEDGER_SCHEMA and "cell" in rec:
-                done[rec["cell"]] = rec
+            warnings.warn(
+                f"ledger {path}: skipping corrupted record on line {i + 1} "
+                "(mid-file damage — affected cells will re-run)",
+                stacklevel=2,
+            )
+            continue
+        if rec.get("schema") == LEDGER_SCHEMA and "cell" in rec:
+            if "error" in rec:
+                continue  # contained failure: the cell is NOT complete
+            done[rec["cell"]] = rec
     return done
 
 
@@ -369,17 +385,53 @@ def _json_safe(obj):
     return obj
 
 
-def append_record(path: str, rec: dict) -> None:
+def append_record(path: str, rec: dict, *, policy: retry.Policy = retry.DEFAULT) -> None:
+    """fsync'd single-line append, retried on transient ``OSError``.
+
+    The fault check runs *before* the file is opened, so an injected (or
+    real) transient failure retried by ``retry.call`` can never double-
+    append: the write itself happens at most once per successful attempt."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    with open(path, "a") as f:
-        f.write(json.dumps(_json_safe(rec), allow_nan=False) + "\n")
-        f.flush()
-        os.fsync(f.fileno())
+    line = json.dumps(_json_safe(rec), allow_nan=False)
+
+    def attempt():
+        faults.io_check("ledger_append")
+        with open(path, "a") as f:
+            f.write(line + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    retry.call(attempt, policy=policy, retry_on=(OSError,))
 
 
 # ---------------------------------------------------------------------------
 # Driving
 # ---------------------------------------------------------------------------
+
+
+def _attempt_cell(fn, *, retries: int, label: str, quiet: bool):
+    """Containment boundary around one cell (or stacked group): run ``fn``
+    with bounded backoff retries; return ``(result, None)`` on success or
+    ``(None, "ExcType: msg")`` once attempts are exhausted.  The
+    ``cell_run`` fault hook fires inside the boundary, so injected
+    transient failures exercise exactly this path."""
+    pause = retry.delays(retry.Policy(attempts=retries + 1, base_delay=0.1))
+    last = None
+    for attempt in range(retries + 1):
+        if attempt:
+            time.sleep(next(pause))
+        try:
+            faults.io_check("cell_run")
+            return fn(), None
+        except Exception as e:  # noqa: BLE001 — keep the sweep alive
+            last = e
+            if not quiet:
+                print(
+                    f"  {label} attempt {attempt + 1}/{retries + 1} failed: "
+                    f"{type(e).__name__}: {e}",
+                    flush=True,
+                )
+    return None, f"{type(last).__name__}: {last}"
 
 
 def run_sweep(
@@ -393,6 +445,8 @@ def run_sweep(
     quiet: bool = False,
     stack: bool = True,
     stack_max: int = 8,
+    contain_errors: bool = True,
+    cell_retries: int = 1,
 ) -> list:
     """Run every grid cell not already in the ledger.
 
@@ -401,6 +455,14 @@ def run_sweep(
     ``clean`` removes a cell's checkpoint directory once its record is
     durable in the ledger; ``stack=False`` forces every cell onto the
     sequential path (``stack_max`` bounds a stacked group's size).
+
+    Per-cell failures are *contained* (``contain_errors=True``): a cell
+    that still fails after ``cell_retries`` backoff retries gets an
+    ``"error"`` ledger record (which never marks it complete — a later
+    sweep re-runs it) and an entry with ``record=None`` plus the error
+    string in the returned list, and the sweep moves on.  A failing
+    stacked group falls back to the sequential path member-by-member
+    before giving up.  ``contain_errors=False`` restores fail-fast.
     """
     cells = expand_grid(sweep)
     done = {} if force else read_ledger(ledger_path)
@@ -431,22 +493,55 @@ def run_sweep(
         t0 = time.time()
         group = plan.get(cid)
         if group is not None and (not max_cells or ran + len(group) <= max_cells):
-            recs = run_cell_batch(sweep, group, checkpoint_root, quiet=quiet)
-            for s2, r2 in zip(group, recs):
-                append_record(ledger_path, r2)
-                stacked_recs[cell_id(s2)] = r2
-            ran += len(group)
-            rec = stacked_recs.pop(cid)
-            if not quiet:
-                print(f"[{i + 1}/{len(cells)}] {cid} "
-                      f"eval={rec['final_eval']:.4f} "
-                      f"(stacked x{len(group)}, "
-                      f"{time.time() - t0:.1f}s total): {spec}", flush=True)
-            out.append({"cell": cid, "spec": spec, "skipped": False,
-                        "record": rec})
-            continue
+            if contain_errors:
+                recs, err = _attempt_cell(
+                    lambda: run_cell_batch(sweep, group, checkpoint_root,
+                                           quiet=quiet),
+                    retries=cell_retries,
+                    label=f"stacked group x{len(group)} ({cid})", quiet=quiet)
+            else:
+                recs, err = run_cell_batch(sweep, group, checkpoint_root,
+                                           quiet=quiet), None
+            if err is None:
+                for s2, r2 in zip(group, recs):
+                    append_record(ledger_path, r2)
+                    stacked_recs[cell_id(s2)] = r2
+                ran += len(group)
+                rec = stacked_recs.pop(cid)
+                if not quiet:
+                    print(f"[{i + 1}/{len(cells)}] {cid} "
+                          f"eval={rec['final_eval']:.4f} "
+                          f"(stacked x{len(group)}, "
+                          f"{time.time() - t0:.1f}s total): {spec}", flush=True)
+                out.append({"cell": cid, "spec": spec, "skipped": False,
+                            "record": rec})
+                continue
+            # contained group failure: record it against this cell, drop
+            # the group from the plan, and fall through to the sequential
+            # path — the remaining members run one-by-one at their turn
+            append_record(ledger_path, _json_safe({
+                "schema": LEDGER_SCHEMA, "cell": cid, "sweep": sweep.name,
+                "spec": spec, "error": err, "stacked": len(group)}))
+            for s2 in group:
+                plan.pop(cell_id(s2), None)
         config = cell_config(sweep, spec, checkpoint_root)
-        result = run_experiment(config, quiet=True)
+        if contain_errors:
+            result, err = _attempt_cell(
+                lambda: run_experiment(config, quiet=True),
+                retries=cell_retries, label=cid, quiet=quiet)
+        else:
+            result, err = run_experiment(config, quiet=True), None
+        if result is None:
+            append_record(ledger_path, _json_safe({
+                "schema": LEDGER_SCHEMA, "cell": cid, "sweep": sweep.name,
+                "spec": spec, "error": err}))
+            ran += 1
+            if not quiet:
+                print(f"[{i + 1}/{len(cells)}] {cid} FAILED (contained, "
+                      f"will re-run next sweep): {err}", flush=True)
+            out.append({"cell": cid, "spec": spec, "skipped": False,
+                        "record": None, "error": err})
+            continue
         rec = _json_safe({
             "schema": LEDGER_SCHEMA,
             "cell": cid,
@@ -487,6 +582,11 @@ def build_argparser():
                     help="run every cell sequentially (disable cell batching)")
     ap.add_argument("--stack-max", type=int, default=8,
                     help="max cells stacked into one executable")
+    ap.add_argument("--fail-fast", dest="contain", action="store_false",
+                    help="abort the sweep on the first cell failure instead "
+                         "of recording an error ledger entry and moving on")
+    ap.add_argument("--cell-retries", type=int, default=1,
+                    help="backoff retries per failing cell before containment")
     ap.add_argument("--list-syncs", action="store_true",
                     help="list the registered sync strategies (valid grid "
                          "modes) and exit")
@@ -516,9 +616,13 @@ def main(argv=None):
     results = run_sweep(sweep, ledger, ckpt_root,
                         max_cells=args.max_cells, force=args.force,
                         clean=args.clean, stack=args.stack,
-                        stack_max=args.stack_max)
+                        stack_max=args.stack_max,
+                        contain_errors=args.contain,
+                        cell_retries=args.cell_retries)
     ran = sum(1 for r in results if not r["skipped"])
-    print(f"done: {ran} ran, {sum(1 for r in results if r['skipped'])} skipped, "
+    failed = sum(1 for r in results if r.get("error"))
+    print(f"done: {ran} ran ({failed} contained failures), "
+          f"{sum(1 for r in results if r['skipped'])} skipped, "
           f"{len(cells) - len(results)} remaining")
 
 

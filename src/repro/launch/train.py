@@ -27,6 +27,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import math
 import time
 
 import jax
@@ -35,7 +36,7 @@ import numpy as np
 from repro import sharding
 from repro.checkpoint import Checkpointer
 from repro.configs import DiLoCoConfig, OptimizerConfig, TrainConfig, get_config
-from repro.core import compute_util, elastic, wallclock
+from repro.core import compute_util, elastic, faults, wallclock
 from repro.core import sync as sync_lib
 from repro.core.diloco import make_trainer
 from repro.core.superstep import SuperstepEngine
@@ -82,6 +83,8 @@ class ExperimentConfig:
     resume: bool = False
     log_every: int = 0
     straggler_rate: float = 0.0
+    faults: str = ""                 # deterministic fault schedule spec
+    #                                  (repro.core.faults.parse grammar)
     metrics_out: str = ""
 
     @classmethod
@@ -163,11 +166,19 @@ def simulate_cell(n_params: int, tokens: int, config: ExperimentConfig) -> dict:
     algorithm = "diloco" if strat.uses_outer_opt else "dp"
     m = config.replicas if algorithm == "diloco" else 1
     h = config.sync_every if algorithm == "diloco" else 1
+    straggler_factor = 1.0
+    fault_spec = getattr(config, "faults", "")
+    if fault_spec and m > 1:
+        # bill the schedule's stragglers: each round runs at the pace of
+        # its slowest surviving replica
+        rounds = max(1, math.ceil(tokens / config.batch_tokens / h))
+        straggler_factor = faults.parse(fault_spec).mean_slowdown(rounds, m)
     wall = wallclock.train_time(
         n_params, tokens, config.batch_tokens,
         algorithm=algorithm, m_replicas=m, sync_every=h,
         outer_payload_bytes=strat.outer_payload_bytes(n_params),
         outer_syncs_per_round=strat.sync_events_per_round,
+        straggler_factor=straggler_factor,
     )
     r = wallclock.num_chips(config.batch_tokens)
     step_time = wallclock.compute_time(n_params, config.batch_tokens, r)
@@ -237,6 +248,14 @@ def build_argparser():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--straggler-rate", type=float, default=0.0,
                     help="probability a replica misses an outer sync (fault-tolerance demo)")
+    ap.add_argument("--faults", default="",
+                    help="deterministic fault schedule, e.g. "
+                         "'crash:replica=1,at=2,rejoin=4;straggle:replica=0,"
+                         "start=1,stop=3,factor=2.5;io:op=ledger_append,"
+                         "fails=2;seed=7' (repro.core.faults grammar): "
+                         "crashed replicas are masked out of the outer "
+                         "average and re-seeded from the global params on "
+                         "rejoin; exactly reproducible from the spec")
     ap.add_argument("--metrics-out", default="")
     ap.add_argument("--no-xla-cache", dest="xla_cache", action="store_false",
                     help="disable the persistent compilation cache "
@@ -322,13 +341,22 @@ def train_loop(args, trainer, data, steps, *, mesh=None, rules=None, quiet=False
         print("warning: --straggler-rate has no effect with fragment-wise "
               "sync strategies (fragment syncs always average all replicas)")
 
+    schedule = None
+    if getattr(args, "faults", ""):
+        schedule = faults.parse(args.faults)
+        if schedule.has_replica_events() and not (
+                m > 1 and trainer.sync.pins_round_boundary
+                and trainer.sync.uses_outer_opt) and not quiet:
+            print("warning: --faults crash/straggle events need M > 1 and a "
+                  "round-pinned outer-sync strategy; ignoring them")
+
     if getattr(args, "engine", "superstep") == "superstep":
         loop = _superstep_loop
     else:
         loop = _per_step_loop
     state, history = loop(
         args, trainer, data, steps, state, start, ckpt,
-        seqs_per_replica=seqs_per_replica, quiet=quiet,
+        seqs_per_replica=seqs_per_replica, quiet=quiet, schedule=schedule,
     )
     if ckpt:
         ckpt.wait()
@@ -343,7 +371,7 @@ def train_loop(args, trainer, data, steps, *, mesh=None, rules=None, quiet=False
 
 
 def _superstep_loop(args, trainer, data, steps, state, start, ckpt, *,
-                    seqs_per_replica, quiet):
+                    seqs_per_replica, quiet, schedule=None):
     """One compiled round per dispatch; host syncs once per round.
 
     Eval and checkpoint cadences fire at the end of the round in which they
@@ -353,25 +381,42 @@ def _superstep_loop(args, trainer, data, steps, state, start, ckpt, *,
     try:
         return _superstep_rounds(
             args, trainer, data, steps, state, start, ckpt, engine,
-            seqs_per_replica=seqs_per_replica, quiet=quiet,
+            seqs_per_replica=seqs_per_replica, quiet=quiet, schedule=schedule,
         )
     finally:
         engine.close()  # drop speculative readahead on exit or error
 
 
 def _superstep_rounds(args, trainer, data, steps, state, start, ckpt, engine, *,
-                      seqs_per_replica, quiet):
+                      seqs_per_replica, quiet, schedule=None):
     eval_step = trainer.jit_eval_step()
     rng = np.random.default_rng(args.seed + 99)
     m = trainer.M
     H = engine.chunk
+    # Fault-schedule masks are round-indexed off the ABSOLUTE step counter,
+    # so a resumed run replays the exact mask/reseed sequence of an
+    # uninterrupted one (the chaos smoke pins this bitwise).
+    use_masks = (schedule is not None and m > 1
+                 and trainer.sync.pins_round_boundary)
     history = []
     t0 = time.time()
     step = start
     while step < steps:
         end, nxt = engine.round_bounds(step, steps)
+        if use_masks and step % H == 0:
+            rejoin = schedule.rejoin_mask(step // H, m)
+            if rejoin.any():
+                # replicas back from the dead: global params, cold inner opt
+                state = elastic.reseed_replicas(trainer, state, rejoin)
         weights = None
-        if (args.straggler_rate > 0 and m > 1
+        if use_masks and end % H == 0:
+            # ALWAYS an explicit weights operand while a schedule is active
+            # (even all-alive rounds): a None <-> array flip would change
+            # the jit input structure and recompile; a constant operand
+            # shape keeps one executable across every mask sequence
+            weights = elastic.participation_weights(
+                schedule.participation_mask((end - 1) // H, m))
+        elif (args.straggler_rate > 0 and m > 1
                 and trainer.sync.pins_round_boundary and end % H == 0):
             weights = _straggler_weights(args, rng, m)
         state, mets = engine.run_round(state, step, end - step, weights=weights,
@@ -398,16 +443,25 @@ def _superstep_rounds(args, trainer, data, steps, state, start, ckpt, engine, *,
 
 
 def _per_step_loop(args, trainer, data, steps, state, start, ckpt, *,
-                   seqs_per_replica, quiet):
+                   seqs_per_replica, quiet, schedule=None):
     m = trainer.M
     strat = trainer.sync
     inner = trainer.jit_inner_step()
     outer = trainer.jit_outer_sync()
     eval_step = trainer.jit_eval_step()
     rng = np.random.default_rng(args.seed + 99)
+    H = trainer.dcfg.sync_every
+    # same absolute-round mask/reseed placement as the superstep engine —
+    # the engine-equivalence tests hold bitwise under any mask sequence
+    use_masks = (schedule is not None and m > 1
+                 and strat.pins_round_boundary and strat.uses_outer_opt)
     history = []
     t0 = time.time()
     for step in range(start, steps):
+        if use_masks and step % H == 0:
+            rejoin = schedule.rejoin_mask(step // H, m)
+            if rejoin.any():
+                state = elastic.reseed_replicas(trainer, state, rejoin)
         batch = data.global_batch(step, m, seqs_per_replica)
         state, metrics = inner(state, batch)
         if strat.uses_outer_opt:
@@ -416,7 +470,10 @@ def _per_step_loop(args, trainer, data, steps, state, start, ckpt, *,
                     state = strat.jitted_fragment(trainer, p)(state)
             elif (step + 1) % trainer.dcfg.sync_every == 0:
                 weights = None
-                if args.straggler_rate > 0 and m > 1:
+                if use_masks:
+                    weights = elastic.participation_weights(
+                        schedule.participation_mask(step // H, m))
+                elif args.straggler_rate > 0 and m > 1:
                     weights = _straggler_weights(args, rng, m)
                 state = outer(state, weights)
         rec = {"step": step + 1, "loss": float(metrics["loss"])}

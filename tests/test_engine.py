@@ -389,6 +389,45 @@ def test_round_prefetcher_close_cancels_inflight_build(monkeypatch):
         pf.get(0, 3)
 
 
+def test_round_prefetcher_surfaces_worker_errors():
+    """A data source raising on the worker thread must re-raise at the next
+    get() — for the matched round AND for a parked mispredicted build —
+    never be silently swallowed with a discarded future."""
+
+    class BoomSource:
+        def global_batch(self, step, m, bs):
+            raise RuntimeError("data source exploded")
+
+    pf = RoundPrefetcher(BoomSource(), num_replicas=1, batch_seqs=1)
+    pf.schedule(0, 2)
+    with pytest.raises(RuntimeError, match="exploded"):
+        pf.get(0, 2)  # the background failure re-raises in the caller
+    pf.close()
+
+    # one-shot failure on a speculative build whose round is then never
+    # fetched under that key: the parked error still surfaces
+    inner = SyntheticLM(vocab_size=32, seq_len=16)
+
+    class OneShotBoom:
+        def __init__(self):
+            self.boomed = False
+
+        def global_batch(self, step, m, bs):
+            if step >= 2 and not self.boomed:
+                self.boomed = True
+                raise RuntimeError("transient data failure")
+            return inner.global_batch(step, m, bs)
+
+    pf = RoundPrefetcher(OneShotBoom(), num_replicas=1, batch_seqs=1)
+    assert pf.get(0, 2) is not None      # schedules (2, 2), which will fail
+    pf._pending[(2, 2)].result()         # worker finishes and parks the error
+    with pytest.raises(RuntimeError, match="transient data failure"):
+        pf.get(0, 2)
+    # the parked error is consumed: the next fetch recovers (rebuilds)
+    assert pf.get(2, 2, next_length=0) is not None
+    pf.close()
+
+
 def test_donated_entry_points_consume_state():
     """jit_inner_step/jit_outer_sync donate: the old state must be dead."""
     trainer, data = _trainer(m=2, h=2)

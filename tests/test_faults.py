@@ -1,0 +1,474 @@
+"""Fault-tolerant runtime tests: deterministic schedules, bounded-backoff
+retry, the global injector, partial-participation outer sync (normalized
+weights, reseed-on-rejoin, engine equivalence under mask sequences with
+zero recompiles), manifest-v3 checkpoint checksums with corrupt-fallback,
+and the wallclock straggler term."""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import SCHEMA_VERSION, Checkpointer, CorruptCheckpointError
+from repro.configs import DiLoCoConfig, OptimizerConfig, TrainConfig, get_config
+from repro.core import elastic, faults, jitcache, retry, wallclock
+from repro.core.cellbatch import CellBatchEngine, stack_trees, unstack_tree
+from repro.core.diloco import make_trainer
+from repro.core.superstep import SuperstepEngine
+from repro.data import SyntheticLM
+
+
+def _trainer(m=2, h=4, seq_len=64, data_seed=1234, **kw):
+    cfg = get_config("tiny-t0")
+    from repro.models import build_model
+
+    model = build_model(cfg)
+    tcfg = TrainConfig(global_batch_tokens=4 * seq_len, seq_len=seq_len, steps=50)
+    dkw = dict(num_replicas=m, sync_every=h)
+    dkw.update(kw)
+    trainer = make_trainer(
+        model, DiLoCoConfig(**dkw),
+        OptimizerConfig(peak_lr=1e-3, warmup_steps=5), tcfg,
+    )
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=seq_len, seed=data_seed)
+    return trainer, data
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_spec_roundtrip():
+    spec = ("crash:replica=1,at=2,rejoin=4;"
+            "straggle:replica=0,start=1,stop=3,factor=2.5;"
+            "io:op=ledger_append,fails=2;corrupt:step=30;seed=7")
+    s = faults.parse(spec)
+    assert s.seed == 7
+    assert faults.parse(s.spec()) == s
+    assert s.spec() == spec
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        faults.parse("explode:now=1")
+    with pytest.raises(ValueError, match="bad option"):
+        faults.parse("crash:when=2")
+
+
+def test_schedule_masks_and_rejoin():
+    s = faults.parse("crash:replica=1,at=2,rejoin=4")
+    np.testing.assert_array_equal(s.participation_mask(1, 3), [True, True, True])
+    np.testing.assert_array_equal(s.participation_mask(2, 3), [True, False, True])
+    np.testing.assert_array_equal(s.participation_mask(3, 3), [True, False, True])
+    np.testing.assert_array_equal(s.participation_mask(4, 3), [True, True, True])
+    # rejoin fires exactly on the first participating round after death
+    assert not s.rejoin_mask(0, 3).any()
+    assert not s.rejoin_mask(2, 3).any()
+    np.testing.assert_array_equal(s.rejoin_mask(4, 3), [False, True, False])
+    # rejoin=-1: dead forever
+    forever = faults.parse("crash:replica=0,at=1")
+    assert not forever.participation_mask(100, 2)[0]
+
+
+def test_schedule_slowdowns():
+    s = faults.parse(
+        "straggle:replica=0,start=1,stop=3,factor=2.5;crash:replica=0,at=2,rejoin=3")
+    assert s.round_slowdown(0, 2) == 1.0
+    assert s.round_slowdown(1, 2) == 2.5
+    # round 2: the straggler is dead — survivors gate the round at 1.0
+    assert s.round_slowdown(2, 2) == 1.0
+    assert s.mean_slowdown(4, 2) == pytest.approx((1.0 + 2.5 + 1.0 + 1.0) / 4)
+    assert s.mean_slowdown(0, 2) == 1.0
+
+
+def test_schedule_random_is_explicit_and_deterministic():
+    a = faults.FaultSchedule.random(11, m=4, rounds=6)
+    b = faults.FaultSchedule.random(11, m=4, rounds=6)
+    assert a == b
+    assert faults.parse(a.spec()) == a  # events are explicit, not seed-lazy
+
+
+# ---------------------------------------------------------------------------
+# retry
+# ---------------------------------------------------------------------------
+
+
+def test_retry_backoff_sequence_and_success():
+    slept, attempts = [], []
+
+    def flaky():
+        attempts.append(1)
+        if len(attempts) < 3:
+            raise OSError("transient")
+        return "ok"
+
+    policy = retry.Policy(attempts=4, base_delay=0.05, multiplier=2.0)
+    out = retry.call(flaky, policy=policy, sleep=slept.append)
+    assert out == "ok" and len(attempts) == 3
+    assert slept == [0.05, 0.1]  # deterministic clock: exact delays
+
+
+def test_retry_exhaustion_and_passthrough():
+    def always_fails():
+        raise OSError("always")
+
+    with pytest.raises(OSError, match="always"):
+        retry.call(always_fails,
+                   policy=retry.Policy(attempts=2, base_delay=0.0),
+                   sleep=lambda _: None)
+    calls = []
+
+    def value_error():
+        calls.append(1)
+        raise ValueError("not retryable")
+
+    with pytest.raises(ValueError):
+        retry.call(value_error, sleep=lambda _: None)
+    assert len(calls) == 1  # non-retry_on exceptions propagate immediately
+    assert list(retry.delays(retry.Policy(attempts=4, base_delay=1.0,
+                                          multiplier=3.0, max_delay=4.0))) \
+        == [1.0, 3.0, 4.0]
+
+
+def test_injector_io_check_counts():
+    assert faults.active() is None
+    faults.io_check("anything")  # no-op without an injector
+    with faults.inject("io:op=ledger_append,fails=2") as inj:
+        for _ in range(2):
+            with pytest.raises(OSError, match="transient ledger_append"):
+                faults.io_check("ledger_append")
+        faults.io_check("ledger_append")  # exhausted
+        faults.io_check("other_op")       # never scheduled
+        assert inj.calls == {"ledger_append": 3, "other_op": 1}
+        assert inj.raised == {"ledger_append": 2}
+        with pytest.raises(RuntimeError, match="already active"):
+            with faults.inject(faults.FaultSchedule()):
+                pass
+    assert faults.active() is None
+
+
+# ---------------------------------------------------------------------------
+# participation_weights / reseed
+# ---------------------------------------------------------------------------
+
+
+def test_participation_weights_all_dead_raises():
+    with pytest.raises(ValueError, match="all-dead"):
+        elastic.participation_weights(np.zeros(4, bool))
+
+
+def test_participation_weights_single_survivor():
+    w = np.asarray(elastic.participation_weights(np.array([0, 0, 1, 0], bool)))
+    np.testing.assert_array_equal(w, [0.0, 0.0, 1.0, 0.0])
+
+
+def test_participation_weights_sum_to_one_float32():
+    for mask in ([1, 1, 1, 0], [1, 1, 1], [1, 0, 1, 1, 0, 1, 1]):
+        w = np.asarray(elastic.participation_weights(np.array(mask, bool)))
+        assert w.dtype == np.float32
+        assert abs(float(w.sum()) - 1.0) <= 1e-6
+        assert (w[~np.array(mask, bool)] == 0).all()
+
+
+def test_reseed_replicas_cold_starts_rejoiners():
+    trainer, data = _trainer(m=2, h=4)
+    inner = jax.jit(trainer.inner_step)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    for t in range(3):  # no sync: replicas diverge, moments/count accrue
+        state, _ = inner(state, data.global_batch(t, 2, 2))
+    ref = jax.tree.map(np.asarray, state)
+
+    state = elastic.reseed_replicas(trainer, state, np.array([False, True]))
+    for g, p in zip(jax.tree.leaves(ref["global_params"]),
+                    jax.tree.leaves(state["inner_params"])):
+        np.testing.assert_array_equal(np.asarray(p[1]), g)  # reseeded
+    for old, new in zip(jax.tree.leaves(ref["inner_params"]),
+                        jax.tree.leaves(state["inner_params"])):
+        np.testing.assert_array_equal(np.asarray(new[0]), old[0])  # untouched
+    for leaf in jax.tree.leaves(state["inner_opt"]["m"]) + \
+            jax.tree.leaves(state["inner_opt"]["v"]):
+        assert not np.asarray(leaf[1]).any()
+    count = np.asarray(state["inner_opt"]["count"])
+    assert count[1] == 0 and count[0] == 3  # cold-start bias correction
+    for old, new in zip(jax.tree.leaves(ref["inner_opt"]["m"]),
+                        jax.tree.leaves(state["inner_opt"]["m"])):
+        np.testing.assert_array_equal(np.asarray(new[0]), old[0])
+
+
+def test_reseed_zeroes_error_feedback():
+    trainer, data = _trainer(m=2, h=2, compression="int8")
+    inner = jax.jit(trainer.inner_step)
+    outer = trainer.jit_outer_sync()
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    for t in range(2):
+        state, _ = inner(state, data.global_batch(t, 2, 2))
+    state = outer(state)  # quantized sync populates the EF residuals
+    assert any(np.asarray(l).any() for l in jax.tree.leaves(state["ef"]))
+    state = elastic.reseed_replicas(trainer, state, np.array([False, True]))
+    for leaf in jax.tree.leaves(state["ef"]):
+        arr = np.asarray(leaf)
+        assert not arr[1].any(), "rejoiner EF must be zeroed"
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence + zero recompiles under mask sequences
+# ---------------------------------------------------------------------------
+
+# rounds of H=2: all alive -> replica 1 dead -> rejoin (reseed at round 2)
+_MASKS = {0: [True, True, True], 1: [True, False, True], 2: [True, True, True]}
+
+
+def _round_weights(rnd):
+    return elastic.participation_weights(np.array(_MASKS[rnd], bool))
+
+
+def _rejoin(rnd):
+    if rnd == 0:
+        return np.zeros(3, bool)
+    return np.array(_MASKS[rnd], bool) & ~np.array(_MASKS[rnd - 1], bool)
+
+
+def _per_step_masked(steps=6, seqs=2):
+    trainer, data = _trainer(m=3, h=2)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    inner = jax.jit(trainer.inner_step)
+    outer = jax.jit(trainer.outer_sync)
+    losses = []
+    for t in range(steps):
+        if t % 2 == 0 and _rejoin(t // 2).any():
+            state = elastic.reseed_replicas(trainer, state, _rejoin(t // 2))
+        state, met = inner(state, data.global_batch(t, 3, seqs))
+        losses.append(float(met["loss"]))
+        if (t + 1) % 2 == 0:
+            state = outer(state, _round_weights(t // 2))
+    return state, losses
+
+
+def _superstep_masked(steps=6, seqs=2):
+    trainer, data = _trainer(m=3, h=2)
+    engine = SuperstepEngine(trainer, data, seqs)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    losses = []
+    step = 0
+    while step < steps:
+        end, _ = engine.round_bounds(step, steps)
+        rnd = step // 2
+        if _rejoin(rnd).any():
+            state = elastic.reseed_replicas(trainer, state, _rejoin(rnd))
+        state, mets = engine.run_round(state, step, end - step,
+                                       weights=_round_weights(rnd))
+        losses.extend(float(x) for x in np.atleast_1d(mets["loss"]))
+        step = end
+    return state, losses
+
+
+def _cellbatch_masked(steps=6, seqs=2, k=2):
+    pairs = [_trainer(m=3, h=2) for _ in range(k)]
+    trainers = [t for t, _ in pairs]
+    datas = [d for _, d in pairs]
+    engine = CellBatchEngine(trainers, datas, seqs)
+    states = engine.init_states([0] * k)
+    losses = []
+    step = 0
+    while step < steps:
+        end, _ = engine.round_bounds(step, steps)
+        rnd = step // 2
+        if _rejoin(rnd).any():
+            states = stack_trees([
+                elastic.reseed_replicas(trainers[i],
+                                        unstack_tree(states, i), _rejoin(rnd))
+                for i in range(k)
+            ])
+        w = np.tile(np.asarray(_round_weights(rnd))[None], (k, 1))
+        states, mets = engine.run_round(states, step, end - step, weights=w)
+        losses.append(np.atleast_2d(mets["loss"]))
+        step = end
+    per_cell = np.concatenate(losses, axis=1)
+    return engine.unstack(states)[0], [float(x) for x in per_cell[0]]
+
+
+def test_engines_agree_bitwise_under_mask_sequence():
+    """Per-step, superstep, and cellbatch must produce identical losses AND
+    identical final states under a crash/rejoin mask sequence — partial
+    participation is engine-invariant."""
+    state_ref, losses_ref = _per_step_masked()
+    state_ss, losses_ss = _superstep_masked()
+    state_cb, losses_cb = _cellbatch_masked()
+    assert losses_ss == losses_ref
+    assert losses_cb == losses_ref
+    for name, state in (("superstep", state_ss), ("cellbatch", state_cb)):
+        for key in ("inner_params", "global_params", "inner_opt", "outer_m"):
+            for a, b in zip(jax.tree.leaves(state[key]),
+                            jax.tree.leaves(state_ref[key])):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"{name} state[{key!r}] diverged")
+
+
+def test_mask_changes_cause_zero_recompiles():
+    """Participation weights are a traced operand: after the first weighted
+    round, every further mask value must reuse the SAME executables
+    (jitcache build-count flat) on both engines."""
+    trainer, data = _trainer(m=3, h=2)
+    engine = SuperstepEngine(trainer, data, 2)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    state, _ = engine.run_round(
+        state, 0, 2, weights=elastic.participation_weights(np.ones(3, bool)))
+    builds = jitcache.build_count()
+    for rnd, mask in enumerate(([1, 0, 1], [0, 1, 1], [1, 1, 0]), start=1):
+        w = elastic.participation_weights(np.array(mask, bool))
+        state, _ = engine.run_round(state, rnd * 2, 2, weights=w)
+    assert jitcache.build_count() == builds, "mask change recompiled"
+
+    pairs = [_trainer(m=3, h=2) for _ in range(2)]
+    cb = CellBatchEngine([t for t, _ in pairs], [d for _, d in pairs], 2)
+    states = cb.init_states([0, 0])
+    states, _ = cb.run_round(states, 0, 2, weights=np.full((2, 3), 1 / 3))
+    builds = jitcache.build_count()
+    states, _ = cb.run_round(
+        states, 2, 2, weights=np.tile([[0.5, 0.0, 0.5]], (2, 1)))
+    assert jitcache.build_count() == builds, "stacked mask change recompiled"
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: v3 checksums, corruption fallback, retried I/O
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_corrupt_newest_falls_back(tmp_path):
+    trainer, _ = _trainer(m=2, h=2)
+    ckpt = Checkpointer(str(tmp_path), trainer=trainer)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    ckpt.save(state, 2)
+    ckpt.save(state, 4)
+    man = json.load(open(tmp_path / f"step_{4:010d}" / "manifest.json"))
+    assert man["schema"] == SCHEMA_VERSION and man["checksums"]
+
+    # content corruption: the archive stays loadable, only checksums catch it
+    faults.corrupt_npz(str(tmp_path / f"step_{4:010d}" / "state.npz"))
+    with pytest.warns(UserWarning, match="failed verification"):
+        restored, step = ckpt.restore()
+    assert step == 2
+    for a, b in zip(jax.tree.leaves(restored["inner_params"]),
+                    jax.tree.leaves(state["inner_params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # an explicitly requested step must raise, never silently fall back
+    with pytest.raises(CorruptCheckpointError, match="checksum"):
+        ckpt.restore(step=4)
+
+    faults.corrupt_npz(str(tmp_path / f"step_{2:010d}" / "state.npz"))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with pytest.raises(CorruptCheckpointError, match="no intact"):
+            ckpt.restore()
+
+
+def test_checkpoint_v2_manifest_restores_without_checksums(tmp_path):
+    trainer, _ = _trainer(m=2, h=2)
+    ckpt = Checkpointer(str(tmp_path), trainer=trainer)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    ckpt.save(state, 3)
+    mpath = tmp_path / f"step_{3:010d}" / "manifest.json"
+    man = json.load(open(mpath))
+    del man["checksums"]
+    man["schema"] = 2
+    json.dump(man, open(mpath, "w"))
+    _, step = ckpt.restore()  # pre-v3 checkpoints load unverified
+    assert step == 3
+
+
+def test_checkpoint_save_retries_transient_io(tmp_path):
+    trainer, _ = _trainer(m=2, h=2)
+    ckpt = Checkpointer(str(tmp_path), trainer=trainer)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    with faults.inject("io:op=checkpoint_save,fails=1") as inj:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            ckpt.save(state, 2)
+    assert inj.raised == {"checkpoint_save": 1}
+    assert ckpt.latest_step() == 2
+
+    # more failures than attempts: the final error propagates
+    with faults.inject("io:op=checkpoint_save,fails=10"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            with pytest.raises(OSError, match="transient checkpoint_save"):
+                ckpt.save(state, 4)
+
+
+def test_checkpoint_restore_retries_transient_io(tmp_path):
+    trainer, _ = _trainer(m=2, h=2)
+    ckpt = Checkpointer(str(tmp_path), trainer=trainer)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    ckpt.save(state, 2)
+    with faults.inject("io:op=checkpoint_restore,fails=1") as inj:
+        _, step = ckpt.restore()
+    assert step == 2 and inj.raised == {"checkpoint_restore": 1}
+
+
+def test_injected_corruption_fires_on_scheduled_step(tmp_path):
+    trainer, _ = _trainer(m=2, h=2)
+    ckpt = Checkpointer(str(tmp_path), trainer=trainer)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    with faults.inject("corrupt:step=4") as inj:
+        ckpt.save(state, 2)
+        ckpt.save(state, 4)
+    assert [s for s, _ in inj.corrupted] == [4]
+    with pytest.warns(UserWarning, match="failed verification"):
+        _, step = ckpt.restore()
+    assert step == 2
+
+
+# ---------------------------------------------------------------------------
+# wallclock straggler term
+# ---------------------------------------------------------------------------
+
+
+def test_wallclock_straggler_term():
+    kw = dict(algorithm="diloco", m_replicas=4, sync_every=30)
+    base = wallclock.train_time(1e8, 2e9, 2 ** 16, **kw)
+    default = wallclock.train_time(1e8, 2e9, 2 ** 16, straggler_factor=1.0, **kw)
+    assert default == base and "straggler_s" not in base  # bitwise-identical
+    slow = wallclock.train_time(1e8, 2e9, 2 ** 16, straggler_factor=2.0, **kw)
+    assert slow["compute_s"] == 2 * base["compute_s"]
+    assert slow["straggler_s"] == base["compute_s"]
+    assert slow["comm_s"] == base["comm_s"]
+    assert slow["total_s"] == slow["compute_s"] + slow["comm_s"]
+    with pytest.raises(ValueError, match="straggler_factor"):
+        wallclock.train_time(1e8, 2e9, 2 ** 16, straggler_factor=0.5, **kw)
+
+
+def test_simulate_cell_bills_schedule_stragglers():
+    from repro.launch.train import ExperimentConfig, simulate_cell
+
+    cfg = ExperimentConfig(arch="tiny-t0", algorithm="diloco", replicas=2,
+                           sync_every=5, batch_tokens=2048, seq_len=128)
+    clean = simulate_cell(int(1e7), int(2048 * 20), cfg)
+    chaotic = simulate_cell(
+        int(1e7), int(2048 * 20),
+        cfg.replace(faults="straggle:replica=0,start=0,stop=4,factor=3"))
+    assert "straggler_s" not in clean["wallclock"]
+    assert chaotic["wallclock"]["straggler_s"] > 0
+    assert chaotic["wallclock"]["total_s"] > clean["wallclock"]["total_s"]
+
+
+# ---------------------------------------------------------------------------
+# train-loop wiring (CLI --faults)
+# ---------------------------------------------------------------------------
+
+
+def test_train_loop_engines_agree_under_fault_schedule():
+    """run_experiment with --faults: superstep and per-step drivers place
+    masks and re-seeds identically (absolute-round indexing)."""
+    from repro.launch.train import ExperimentConfig, run_experiment
+
+    cfg = ExperimentConfig(
+        arch="tiny-t0", algorithm="diloco", replicas=3, sync_every=2,
+        steps=6, batch_tokens=768, seq_len=64, warmup=2, eval_every=0,
+        log_every=0, eval_batches=1,
+        faults="crash:replica=1,at=1,rejoin=2")
+    r_ss = run_experiment(cfg.replace(engine="superstep"))
+    r_ps = run_experiment(cfg.replace(engine="per-step"))
+    assert [h["loss"] for h in r_ss.history] == [h["loss"] for h in r_ps.history]

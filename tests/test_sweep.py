@@ -262,6 +262,52 @@ def test_ledger_roundtrip_and_truncated_tail(tmp_path):
     assert set(read_ledger(path)) == {"aaa", "bbb"}
 
 
+def test_ledger_warns_on_midfile_garbage(tmp_path):
+    """Damage BETWEEN intact records is not a benign crash artifact (that's
+    only ever the tail): read_ledger must warn — the affected cells will
+    silently re-run — while still returning every parseable record."""
+    path = str(tmp_path / "ledger.jsonl")
+    append_record(path, {"schema": 1, "cell": "aaa", "final_eval": 1.0})
+    with open(path, "a") as f:
+        f.write("%% not json at all %%\n")
+    append_record(path, {"schema": 1, "cell": "bbb", "final_eval": 2.0})
+    with pytest.warns(UserWarning, match="line 2"):
+        done = read_ledger(path)
+    assert set(done) == {"aaa", "bbb"}
+
+
+def test_ledger_error_records_do_not_mark_cells_done(tmp_path):
+    path = str(tmp_path / "ledger.jsonl")
+    append_record(path, {"schema": 1, "cell": "aaa", "final_eval": 1.0})
+    append_record(path, {"schema": 1, "cell": "bbb", "sweep": "test",
+                         "spec": {}, "error": "RuntimeError: boom"})
+    done = read_ledger(path)
+    assert set(done) == {"aaa"}  # the failed cell stays eligible to re-run
+
+
+def test_run_sweep_contains_cell_failures(tmp_path):
+    """A cell whose attempts are exhausted is contained — error record in
+    the ledger, sweep stays alive — and a later sweep picks it back up."""
+    from repro.core import faults
+
+    ledger = str(tmp_path / "ledger.jsonl")
+    ckpt = str(tmp_path / "ckpt")
+    with faults.inject("io:op=cell_run,fails=2") as inj:
+        out = run_sweep(TINY, ledger, ckpt, quiet=True, stack=False,
+                        cell_retries=1)
+    assert inj.raised == {"cell_run": 2}  # both attempts of the first cell
+    failed = [r for r in out if r.get("error")]
+    ok = [r for r in out if r["record"]]
+    assert len(failed) == 1 and len(ok) == 1
+    assert failed[0]["record"] is None
+    assert len(read_ledger(ledger)) == 1
+
+    out2 = run_sweep(TINY, ledger, ckpt, quiet=True, stack=False)
+    assert all(r["record"] for r in out2)
+    assert sum(r["skipped"] for r in out2) == 1
+    assert len(read_ledger(ledger)) == 2
+
+
 def test_ledger_never_emits_bare_nan_tokens(tmp_path):
     """A zero-new-steps resume records final_train=NaN; the ledger must
     stay strict JSON (NaN/Infinity tokens break jq / JSON.parse)."""
